@@ -1,0 +1,39 @@
+"""Paper Fig. 9: frontier occupancy per traversal level.
+
+GPU metric was wavefronts queued vs 440 SIMD units; the TPU analogue
+(DESIGN.md §2) is the fraction of 128-row tiles containing ≥1 active
+vertex — the dense-sweep utilization of the expansion kernel — plus the
+frontier width (active vertices / colors) per level.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import traversal
+from repro.graph import generators
+
+
+def run(n=4000, deg=12.0, colors=(1, 8, 32), probs=(0.05, 0.2), out=print):
+    out("# Fig9: colors,prob,level,frontier_vertices,frontier_colors,"
+        "active_tile_frac")
+    rows = []
+    for p in probs:
+        g = generators.powerlaw_cluster(n, deg, prob=p, seed=5)
+        for c in colors:
+            starts = traversal.random_starts(jax.random.key(2), n, c)
+            res = traversal.run_fused(g, starts, c, jnp.uint32(3))
+            lv = int(res.stats.levels_run)
+            for level in range(lv):
+                row = (c, p, level,
+                       int(res.stats.frontier_vertices[level]),
+                       int(res.stats.frontier_colors[level]),
+                       round(float(res.stats.active_tile_frac[level]), 4))
+                rows.append(row)
+                out(",".join(str(x) for x in row))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

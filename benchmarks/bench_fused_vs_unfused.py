@@ -1,0 +1,73 @@
+"""Paper Figs. 7/8: fused vs unfused wall-time speedup grid.
+
+Two execution models, mirroring the two GPU ports:
+  * gIM-style   — many traversals resident at once: fused = one run with C
+    colors; unfused = C independent single-color runs (batched as C runs of
+    1 color through the same kernel for fairness).
+  * Ripples-style — device-wide level-synchronous sweeps: identical math;
+    fused raises per-sweep concurrency from 1 to C (the paper's "BPT
+    concurrency" win) — we report both wall time and edge-visit counts.
+
+CPU wall times are directionally meaningful only (interpret/TPU-target
+kernels); edge-visit ratios are exact (coupled RNG).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import traversal
+from repro.graph import csr, generators
+
+
+def _time(fn, *args, reps=2):
+    fn(*args)                                     # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(n=3000, deg=10.0, colors=(8, 32, 64), probs=(0.05, 0.1, 0.2),
+        out=print):
+    out("# Fig7/8: colors,prob,t_fused_s,t_unfused_s,speedup,"
+        "visit_ratio")
+    rows = []
+    base = generators.powerlaw_cluster(n, deg, prob=0.3, seed=2)
+    e = base.num_edges
+    src = np.asarray(base.src)[:e]
+    dst = np.asarray(base.dst)[:e]
+    for p in probs:
+        g = csr.from_edges(src, dst, np.full(e, p, np.float32), n)
+        for c in colors:
+            starts = traversal.random_starts(jax.random.key(0), n, c)
+            t_fused = _time(
+                lambda: traversal.run_fused(g, starts, c, jnp.uint32(1)))
+            res = traversal.run_fused(g, starts, c, jnp.uint32(1))
+
+            # unfused: C single-color runs (jit reused across colors)
+            def unfused():
+                outs = []
+                for ci in range(c):
+                    outs.append(traversal.run_single_color(
+                        g, int(starts[ci]), ci, jnp.uint32(1)))
+                jax.block_until_ready(outs[-1].visited)
+                return outs
+            t0 = time.perf_counter()
+            unfused()
+            t_unf = time.perf_counter() - t0
+
+            ratio = (int(res.stats.fused_edge_visits.sum())
+                     / max(int(res.stats.unfused_edge_visits.sum()), 1))
+            row = (c, p, round(t_fused, 4), round(t_unf, 4),
+                   round(t_unf / max(t_fused, 1e-9), 2), round(ratio, 4))
+            rows.append(row)
+            out(",".join(str(x) for x in row))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""End-to-end influence maximization (the paper's application, Table-1
+style): θ sampling via fused BPTs + greedy max-k-cover on SNAP-scale-down
+clones, reporting seed quality (vs forward simulation) and edge-visit
+savings."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import imm
+from repro.graph import generators
+
+
+# name → (n, avg_deg) scale-downs of Table 1 (full sizes in graph/datasets)
+GRAPHS = {
+    "web-BerkStan-mini": (3000, 11.0),
+    "soc-pokec-mini": (4000, 18.0),
+    "com-Orkut-mini": (2500, 30.0),
+}
+
+
+def run(k=8, eps=0.5, colors=64, theta_cap=4096, out=print):
+    out("# IMM: graph,theta,coverage,sigma_est,sigma_fwd,visit_savings_pct,"
+        "seconds")
+    rows = []
+    for name, (n, deg) in GRAPHS.items():
+        g = generators.powerlaw_cluster(n, deg, prob=(0.0, 0.3),
+                                        seed=hash(name) % 997)
+        t0 = time.perf_counter()
+        res = imm.run_imm(g, k=k, eps=eps, num_colors=colors,
+                          theta_cap=theta_cap)
+        dt = time.perf_counter() - t0
+        fwd = imm.simulate_influence(g, res.seeds, num_trials=256)
+        sav = 100 * (1 - res.fused_edge_visits
+                     / max(res.unfused_edge_visits, 1))
+        row = (name, res.theta, round(res.coverage, 4),
+               round(res.sigma_estimate, 1), round(fwd, 1),
+               round(sav, 2), round(dt, 2))
+        rows.append(row)
+        out(",".join(str(x) for x in row))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""§Roofline aggregation: read every dry-run JSON under results/ and print
+the per-(arch × shape × mesh) table with the three terms, the dominant
+bottleneck, and the useful-FLOPs fraction."""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def load_records(mesh_filter=None):
+    recs = []
+    for f in sorted(glob.glob(str(RESULTS / "dryrun_*.json"))):
+        r = json.load(open(f))
+        if mesh_filter and r.get("mesh") != mesh_filter:
+            continue
+        recs.append(r)
+    return recs
+
+
+def table(out=print, mesh_filter=None):
+    recs = load_records(mesh_filter)
+    out("# Roofline: arch,shape,mesh,status,compute_s,memory_s,"
+        "collective_s,dominant,useful_frac,arg_GB,temp_GB")
+    rows = []
+    for r in recs:
+        if r["status"] == "skipped":
+            row = (r["arch"], r["shape"], r["mesh"], "skipped", "-", "-",
+                   "-", "-", "-", "-", "-")
+        elif r["status"] != "ok":
+            row = (r["arch"], r["shape"], r["mesh"], "ERROR", "-", "-",
+                   "-", "-", "-", "-", "-")
+        else:
+            rt = r["roofline"]
+            mem = r.get("memory", {})
+            uf = rt.get("useful_fraction")
+            row = (r["arch"], r["shape"], r["mesh"], "ok",
+                   f"{rt['compute_s']:.4f}", f"{rt['memory_s']:.4f}",
+                   f"{rt['collective_s']:.4f}", rt["dominant"],
+                   f"{uf:.3f}" if uf is not None else "-",
+                   f"{(mem.get('argument_bytes') or 0)/1e9:.2f}",
+                   f"{(mem.get('temp_bytes') or 0)/1e9:.2f}")
+        rows.append(row)
+        out(",".join(str(x) for x in row))
+    return rows
+
+
+if __name__ == "__main__":
+    table()

@@ -1,0 +1,45 @@
+"""Benchmark driver: one bench per paper table/figure + kernel micros +
+the roofline table from dry-run records.  ``python -m benchmarks.run``.
+
+Sizes are scaled for CPU wall-clock sanity; every bench accepts kwargs for
+full-size runs on real hardware.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import (bench_work_savings, bench_reorder,
+                            bench_fused_vs_unfused, bench_frontier_profile,
+                            bench_kernels, bench_imm, bench_scaling,
+                            roofline)
+
+    sections = [
+        ("Fig4 work savings / occupancy", lambda: bench_work_savings.run(
+            n=1200, degrees=(4, 11), colors=(32, 64),
+            probs=(0.1, 0.3), seeds=(0,))),
+        ("Fig5 reordering", lambda: bench_reorder.run(n=2000)),
+        ("Fig7/8 fused vs unfused", lambda: bench_fused_vs_unfused.run(
+            n=1500, colors=(8, 32), probs=(0.1, 0.2))),
+        ("Fig9 frontier profile", lambda: bench_frontier_profile.run(
+            n=2000, colors=(1, 32), probs=(0.2,))),
+        ("kernel micros", bench_kernels.run),
+        ("IMM end-to-end", lambda: bench_imm.run(theta_cap=2048)),
+        ("Fig10/11 device scaling", lambda: bench_scaling.run(
+            device_counts=(1, 2, 4, 8))),
+        ("Roofline table (from dry-run records)", roofline.table),
+    ]
+    for name, fn in sections:
+        print(f"\n===== {name} =====")
+        try:
+            fn()
+        except Exception as e:          # keep the suite going
+            print(f"BENCH-ERROR {name}: {type(e).__name__}: {e}")
+    print(f"\n[benchmarks] total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""End-to-end influence maximization (the paper's application).
+
+Pipeline: θ estimation (IMM martingale bound) → fused reverse-BPT sampling
+through the FAULT-TOLERANT driver (injected failures + stragglers, batches
+re-issued idempotently) → greedy max-k-cover seed selection → validation of
+σ(S) against forward Monte-Carlo simulation.
+
+    PYTHONPATH=src python examples/influence_max.py [--k 8] [--n 3000]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import imm, rrr
+from repro.core.driver import SamplingDriver
+from repro.graph import csr, generators
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=3000)
+    ap.add_argument("--deg", type=float, default=12.0)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--colors", type=int, default=64)
+    ap.add_argument("--theta", type=int, default=4096)
+    ap.add_argument("--failure-rate", type=float, default=0.15)
+    args = ap.parse_args()
+
+    g = generators.powerlaw_cluster(args.n, args.deg, prob=(0.0, 0.25),
+                                    seed=1)
+    print(f"graph |V|={g.num_vertices} |E|={g.num_edges}; "
+          f"θ={args.theta}, k={args.k}, {args.colors} colors/batch")
+
+    # --- sampling through the fault-tolerant work queue ------------------
+    n_batches = -(-args.theta // args.colors)
+    drv = SamplingDriver(csr.transpose(g), args.colors, master_seed=7,
+                         num_workers=4, failure_rate=args.failure_rate,
+                         slow_rate=0.1, slow_s=0.1, max_attempts=25)
+    t0 = time.time()
+    batches = drv.run(n_batches)
+    dt = time.time() - t0
+    print(f"sampled {len(batches)} batches in {dt:.1f}s "
+          f"(injected failures={drv.stats.failures}, "
+          f"reissues={drv.stats.reissues}, "
+          f"speculative={drv.stats.speculative})")
+
+    # --- seed selection ---------------------------------------------------
+    visited = rrr.stack_visited(batches)
+    seeds, cov = imm.greedy_max_cover(visited, args.k, args.colors)
+    sigma_rev = cov * g.num_vertices
+    print(f"seeds: {seeds.tolist()}")
+    print(f"coverage {cov:.4f}  →  σ̂(S) ≈ {sigma_rev:.1f} vertices")
+
+    # --- validate against forward simulation ------------------------------
+    sigma_fwd = imm.simulate_influence(g, seeds, num_trials=512)
+    print(f"forward-simulated σ(S) = {sigma_fwd:.1f} "
+          f"(reverse/forward ratio {sigma_rev/sigma_fwd:.3f})")
+
+    rnd = np.random.default_rng(0).integers(0, g.num_vertices, args.k)
+    sigma_rnd = imm.simulate_influence(g, rnd, num_trials=256)
+    print(f"random-seed baseline σ = {sigma_rnd:.1f}  "
+          f"(greedy is {sigma_fwd/max(sigma_rnd,1e-9):.2f}× better)")
+
+
+if __name__ == "__main__":
+    main()

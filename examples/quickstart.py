@@ -1,0 +1,38 @@
+"""Quickstart: fused probabilistic traversals in 30 lines.
+
+Runs a fused batch of 64 BPTs on a power-law graph, shows the work saved
+vs unfused (Theorem 1 in action, on coupled realizations), and extracts
+RRR sets from the visited bitmask.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmask, traversal
+from repro.graph import generators
+
+# 1. a graph: 2,000 vertices, power-law degrees, IC probabilities ~U(0,0.3)
+g = generators.powerlaw_cluster(2000, 10.0, prob=(0.0, 0.3), seed=0)
+print(f"graph: |V|={g.num_vertices} |E|={g.num_edges}")
+
+# 2. fuse 64 traversals ("colors") into ONE frontier sweep
+colors = 64
+starts = traversal.random_starts(jax.random.key(0), g.num_vertices, colors)
+result = traversal.run_fused(g, starts, colors, seed=jnp.uint32(42))
+
+fused = int(result.stats.fused_edge_visits.sum())
+unfused = int(result.stats.unfused_edge_visits.sum())
+print(f"levels run:        {int(result.stats.levels_run)}")
+print(f"edge visits fused:   {fused:8d}")
+print(f"edge visits unfused: {unfused:8d}   "
+      f"(work saved: {100*(1-fused/unfused):.1f}%)")
+
+# 3. the visited bitmask IS the RRR-set collection, columnar:
+sizes = np.asarray(bitmask.count_colors(result.visited))
+print(f"reachable-set sizes: min={sizes[sizes>0].min()} "
+      f"mean={sizes.mean():.1f} max={sizes.max()}")
+rrr_0 = np.flatnonzero(np.asarray(result.visited[:, 0]) & 1)
+print(f"RRR set of color 0 (start={int(starts[0])}): "
+      f"{len(rrr_0)} vertices, first 10: {rrr_0[:10].tolist()}")

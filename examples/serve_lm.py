@@ -1,0 +1,51 @@
+"""Batched serving demo: prefill once, decode N tokens, any architecture.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-1.3b \
+        --batch 4 --new-tokens 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import model
+from repro.serve import engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b",
+                    choices=registry.ARCHS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    import dataclasses
+    cfg = dataclasses.replace(registry.smoke(args.arch),
+                              num_patches=0, capacity_factor=8.0)
+    params = model.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(1)
+    shape = ((args.batch, cfg.num_codebooks, args.prompt_len)
+             if cfg.num_codebooks else (args.batch, args.prompt_len))
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, shape))
+
+    t0 = time.time()
+    out = engine.generate(params, cfg, prompt, args.new_tokens,
+                          key=jax.random.key(7),
+                          temperature=args.temperature)
+    dt = time.time() - t0
+    toks = args.batch * args.new_tokens * max(cfg.num_codebooks, 1)
+    print(f"[serve] {cfg.name}: batch={args.batch} prompt={args.prompt_len} "
+          f"generated {args.new_tokens} tokens/req in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s, CPU smoke config)")
+    print("[serve] sample output ids:",
+          np.asarray(out)[0].reshape(-1)[:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Sharded, manifest-described, atomic checkpointing with async writes and
+elastic (mesh-shape-changing) restore.
+
+Layout per step:  ``<dir>/step_<N>/{manifest.json, leaf_<i>.npy …}``
+written into ``step_<N>.tmp`` then ``os.replace``d — a crashed writer can
+never produce a half checkpoint that restore would accept.
+
+Elastic restore: leaves are saved as *global* arrays with their tree paths;
+``restore(..., shardings=...)`` re-places each leaf under ANY mesh (the new
+mesh may have a different data/model split or lose the "pod" axis), which is
+the resize story for elastic scaling.  On a real multi-host pod each host
+would write its addressable shards; the manifest format already records
+per-leaf shape/dtype so that extension is additive.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+
+def _np_dtype(name: str):
+    """Resolve extended dtypes (bfloat16, fp8) that numpy can't name."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path) for path, _ in flat]
+    return paths, [leaf for _, leaf in flat], treedef
+
+
+def save(directory: str, step: int, tree: Any, *, keep: int = 3,
+         blocking: bool = True) -> threading.Thread | None:
+    """Write checkpoint for ``step``.  ``blocking=False`` returns the writer
+    thread (async checkpointing: training continues while the host writes;
+    the arrays are fetched to host *before* returning so the device buffers
+    are free to be donated)."""
+    paths, leaves, _ = _flatten(tree)
+    host_leaves = [np.asarray(x) for x in leaves]      # device→host now
+
+    def _write():
+        final = os.path.join(directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": []}
+        for i, (p, a) in enumerate(zip(paths, host_leaves)):
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), a)
+            manifest["leaves"].append(
+                {"path": p, "file": fname, "shape": list(a.shape),
+                 "dtype": str(a.dtype)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)                          # atomic publish
+        _cleanup(directory, keep)
+
+    if blocking:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def _cleanup(directory: str, keep: int):
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(directory, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, target_tree: Any, step: Optional[int] = None,
+            shardings: Any = None) -> tuple[Any, int]:
+    """Restore into the structure of ``target_tree`` (values ignored).
+
+    ``shardings``: optional matching tree of NamedShardings — pass the NEW
+    mesh's shardings to perform an elastic reshape on restore.
+    """
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+
+    paths, leaves, treedef = _flatten(target_tree)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for p, ref, sh in zip(paths, leaves, shard_leaves):
+        entry = by_path.get(p)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {p!r}")
+        arr = np.load(os.path.join(d, entry["file"]))
+        want = _np_dtype(entry["dtype"])
+        if arr.dtype != want:                       # np.save stored raw bits
+            arr = arr.view(want)
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"{p}: shape {arr.shape} != {tuple(ref.shape)}")
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), step

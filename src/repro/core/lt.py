@@ -1,0 +1,120 @@
+"""Fused traversals under the Linear Threshold (LT) diffusion model.
+
+The paper evaluates IC but defines both models (§2).  For RIS under LT the
+classic live-edge equivalence (Kempe et al. 2003) applies: each vertex
+selects AT MOST ONE incoming edge, edge (v→u) with probability w(v,u)
+(Σ_v w(v,u) ≤ 1, none with 1−Σw); an RRR set is the reverse-reachable set
+over the selected edges.  Fusion carries over directly: the selection is
+*per (vertex, color)* — vertex u's chosen in-edge for color c is a pure
+counter-hash of (seed, u, c), so the whole traversal stays level-sync
+bitmask propagation and edge (v→u) propagates color c iff it IS u's
+selection for c.
+
+Unlike IC there is no per-level redraw: selections are fixed per traversal
+(the live-edge subgraph is sampled once), which the hash structure encodes
+by excluding ``level`` from the counters.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmask, rng
+from repro.core.traversal import init_frontier
+from repro.graph import csr
+
+
+def normalize_lt_weights(g: csr.Graph) -> csr.Graph:
+    """Scale each vertex's IN-edge weights to sum ≤ 1 (LT requirement).
+
+    Incoming weight mass w(v,u) = prob(v,u) / max(1, Σ_in prob(·,u)).
+    """
+    e = g.num_edges
+    dst = np.asarray(g.dst)[:e]
+    prob = np.asarray(g.prob)[:e].astype(np.float64)
+    in_sum = np.zeros(g.num_vertices)
+    np.add.at(in_sum, dst, prob)
+    scale = 1.0 / np.maximum(in_sum[dst], 1.0)
+    new_prob = (prob * scale).astype(np.float32)
+    return csr.from_edges(np.asarray(g.src)[:e], dst, new_prob,
+                          g.num_vertices, pad_to=g.padded_edges)
+
+
+def _selection_mask(g: csr.Graph, num_colors: int, seed) -> jnp.ndarray:
+    """(E_pad, W) uint32: bit c of edge e set iff e is dst[e]'s live edge
+    for color c.  Inverse-CDF over each vertex's in-edge list: edge e is
+    selected for color c iff  cum_before[e] ≤ u(dst,c) < cum_before[e]+p[e]
+    where u ~ U[0,1) per (dst, color) — at most one edge wins, and the
+    no-edge case (u ≥ Σp) selects nothing, all per the LT live-edge rule.
+    """
+    e_pad = g.padded_edges
+    e = g.num_edges
+    dst = g.dst
+    prob = g.prob.astype(jnp.float32)
+
+    # prefix sums of in-edge probability per destination, in dst-sorted
+    # order (host-side precompute keeps the jit side gather-only).
+    dst_np = np.asarray(dst)[:e]
+    prob_np = np.asarray(prob)[:e].astype(np.float64)
+    order = np.argsort(dst_np, kind="stable")
+    sorted_prob = prob_np[order]
+    sorted_dst = dst_np[order]
+    csum = np.cumsum(sorted_prob)
+    group_start = np.searchsorted(sorted_dst, sorted_dst, side="left")
+    prefix = csum - sorted_prob                       # Σ p before i (global)
+    cum_before_sorted = prefix - prefix[group_start]  # per-dst prefix
+    cum_before = np.zeros(e_pad, np.float32)
+    cum_before[order] = cum_before_sorted.astype(np.float32)
+    cb = jnp.asarray(cum_before)
+
+    words = []
+    for w in range(bitmask.num_words(num_colors)):
+        lanes = []
+        for lane in range(32):
+            c = w * 32 + lane
+            # one uniform per (destination vertex, color): edges into the
+            # same vertex share it — at most one falls in its CDF slot.
+            u = rng.uniform_from_u32(
+                rng.hash_u32(seed, jnp.uint32(0x17), dst.astype(jnp.uint32),
+                             jnp.uint32(c)))
+            sel = jnp.logical_and(u >= cb, u < cb + prob)
+            lanes.append(sel)
+        words.append(rng.pack_bool_word(jnp.stack(lanes, -1)))
+    return jnp.stack(words, -1)
+
+
+def run_fused_lt(g: csr.Graph, starts, num_colors: int, seed,
+                 max_levels: int = 64):
+    """Fused LT traversal: visited (V, W) — column c = LT RRR set c.
+
+    The live-edge selection mask precomputes on host (CDF prefix sums need
+    concrete arrays); the level loop is jitted."""
+    seed = jnp.uint32(seed)
+    sel = _selection_mask(g, num_colors, seed)         # (E, W)
+    return _run_fused_lt_jit(g, sel, starts, num_colors, max_levels)
+
+
+@partial(jax.jit, static_argnames=("num_colors", "max_levels"))
+def _run_fused_lt_jit(g: csr.Graph, sel, starts, num_colors: int,
+                      max_levels: int):
+    frontier = init_frontier(g.num_vertices, num_colors, starts)
+    visited = jnp.zeros_like(frontier)
+
+    def cond(c):
+        fr, _, lvl = c
+        return jnp.logical_and(bitmask.any_set(fr), lvl < max_levels)
+
+    def body(c):
+        fr, vis, lvl = c
+        vis = vis | fr
+        contrib = fr[g.src] & sel & ~vis[g.dst]
+        from repro.core.traversal import _scatter_or
+        nf = _scatter_or(jnp.zeros_like(vis), g.dst, contrib) & ~vis
+        return nf, vis, lvl + 1
+
+    fr, vis, _ = jax.lax.while_loop(cond, body,
+                                    (frontier, visited, jnp.int32(0)))
+    return vis | fr

@@ -1,0 +1,87 @@
+"""Random Reverse Reachable (RRR) set sampling (paper §2, Def. 2).
+
+An RRR set for a uniformly-random root v is the visited set of a *reverse*
+probabilistic BFS from v (Def. 2: traverse G with every edge flipped).  The
+fused algorithm samples ``num_colors`` RRR sets per batch: color c's RRR set
+is bit c of the visited mask — the (V, W) bitmask IS the RRR collection in
+columnar form, which is exactly what greedy max-cover wants (DESIGN.md §2).
+
+Batches are the unit of distribution and fault tolerance: batch ``b`` is a
+pure function of ``(graph, master_seed, b)``, so a re-executed batch (lost
+node, straggler reissue) reproduces the identical samples.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmask, tiled_traversal, tiles, traversal
+from repro.graph import csr
+
+
+@dataclasses.dataclass(frozen=True)
+class RRRBatch:
+    """One fused batch of ``num_colors`` RRR sets."""
+    visited: jnp.ndarray        # (V, W) uint32; column c = RRR set c
+    roots: np.ndarray           # (num_colors,) root vertex per color
+    batch_index: int
+    fused_edge_visits: int
+    unfused_edge_visits: int
+
+
+def batch_seed(master_seed: int, batch_index: int) -> jnp.ndarray:
+    """Distinct, reproducible RNG stream per batch (idempotent re-issue)."""
+    return jnp.uint32((master_seed * 0x9E3779B9 + batch_index * 0x85EBCA6B)
+                      & 0xFFFFFFFF)
+
+
+def sample_batch(g_rev: csr.Graph, num_colors: int, master_seed: int,
+                 batch_index: int, *, sort_starts: bool = False,
+                 max_levels: int = 64,
+                 tg_rev: tiles.TiledGraph | None = None,
+                 use_kernel: bool = False,
+                 model: str = "ic") -> RRRBatch:
+    """Sample one fused batch of RRR sets on the REVERSED graph ``g_rev``.
+
+    ``model``: "ic" (Independent Cascade, the paper's evaluation model) or
+    "lt" (Linear Threshold via live-edge selection — g_rev must carry
+    LT-normalized in-weights, see core/lt.normalize_lt_weights).
+    ``tg_rev``/``use_kernel`` switch expansion to the tiled Pallas path;
+    results are bit-for-bit identical to the CSR path (coupled RNG).
+    """
+    seed = batch_seed(master_seed, batch_index)
+    key = jax.random.key(master_seed * 1_000_003 + batch_index)
+    roots = traversal.random_starts(key, g_rev.num_vertices, num_colors,
+                                    sort=sort_starts)
+    if model == "lt":
+        from repro.core import lt
+        visited = lt.run_fused_lt(g_rev, roots, num_colors, seed,
+                                  max_levels=max_levels)
+        return RRRBatch(visited, np.asarray(roots), batch_index, -1, -1)
+    if tg_rev is not None:
+        visited, _ = tiled_traversal.run_fused_tiled(
+            tg_rev, roots, num_colors, seed, max_levels=max_levels,
+            use_kernel=use_kernel)
+        return RRRBatch(visited, np.asarray(roots), batch_index, -1, -1)
+    res = traversal.run_fused(g_rev, roots, num_colors, seed,
+                              max_levels=max_levels)
+    return RRRBatch(res.visited, np.asarray(roots), batch_index,
+                    int(res.stats.fused_edge_visits.sum()),
+                    int(res.stats.unfused_edge_visits.sum()))
+
+
+def sample_collection(g: csr.Graph, theta: int, num_colors: int,
+                      master_seed: int = 0, **kw) -> list[RRRBatch]:
+    """θ RRR sets as ⌈θ/num_colors⌉ fused batches on transpose(g)."""
+    g_rev = csr.transpose(g)
+    n_batches = -(-theta // num_colors)
+    return [sample_batch(g_rev, num_colors, master_seed, b, **kw)
+            for b in range(n_batches)]
+
+
+def stack_visited(batches: list[RRRBatch]) -> jnp.ndarray:
+    """(B, V, W) stacked visited masks for seed selection."""
+    return jnp.stack([b.visited for b in batches])

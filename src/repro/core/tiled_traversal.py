@@ -1,0 +1,56 @@
+"""Full fused-BPT traversal on the block-sparse tile layout.
+
+Same level-synchronous semantics as ``core.traversal.run_fused`` (the CSR
+edge-centric path) but expansion goes through the tile formulation — either
+the Pallas kernel (``use_kernel=True``) or its pure-jnp oracle.  Because all
+three paths share the counter RNG keyed by *CSR edge id*, their visited masks
+are bit-for-bit identical; tests rely on it.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmask, tiles
+from repro.core.traversal import init_frontier
+from repro.kernels import fused_expand as fe
+from repro.kernels import ref as kref
+
+
+@partial(jax.jit, static_argnames=("num_colors", "max_levels", "use_kernel",
+                                   "interpret"))
+def run_fused_tiled(tg: tiles.TiledGraph, starts, num_colors: int, seed,
+                    max_levels: int = 64, use_kernel: bool = True,
+                    interpret: bool = True):
+    """Returns (visited (V, W) uint32, levels_run int32)."""
+    vp = tg.padded_vertices
+    frontier = tiles.pad_mask_rows(
+        init_frontier(tg.num_vertices, num_colors, starts), vp)
+    visited = jnp.zeros_like(frontier)
+    seed = jnp.uint32(seed)
+
+    def expand(fr, vis, level):
+        if use_kernel:
+            return fe.fused_expand(
+                tg.prob, tg.edge_id, tg.tile_src, tg.tile_dst,
+                tg.first_of_dst, fr, vis, seed, level, interpret=interpret)
+        return kref.fused_expand_ref(
+            tg.prob, tg.edge_id, tg.tile_src, tg.tile_dst, fr, vis, seed,
+            level)
+
+    def cond(carry):
+        fr, _, level = carry
+        return jnp.logical_and(bitmask.any_set(fr), level < max_levels)
+
+    def body(carry):
+        fr, vis, level = carry
+        vis = vis | fr                                   # Listing 1 line 8
+        nf = expand(fr, vis, level.astype(jnp.uint32))
+        return nf, vis, level + 1
+
+    frontier, visited, levels = jax.lax.while_loop(
+        cond, body, (frontier, visited, jnp.int32(0)))
+    visited = visited | frontier                         # cap-level colors
+    return visited[: tg.num_vertices], levels

@@ -1,0 +1,143 @@
+"""Block-sparse adjacency tiles — the TPU-native graph layout (DESIGN.md §2).
+
+The GPU codes stream a CSR through warp-level gather/scatter queues.  The MXU
+and VPU instead want dense, aligned tiles, so we store the adjacency matrix
+``A[src, dst]`` as a list of non-empty ``T×T`` tiles (T = 128, the VPU lane
+width and MXU edge).  Each tile carries:
+
+  * ``prob``    (T, T) float32 — IC activation probability (0 ⇒ no edge),
+  * ``edge_id`` (T, T) uint32  — the edge's index in the *CSR* edge array, so
+    the counter RNG draws the identical Bernoulli realization on the tiled
+    path, the CSR path, and inside the Pallas kernel (bit-for-bit coupling).
+
+Tiles are sorted by destination block so the expansion kernel can accumulate
+each output block across consecutive grid steps (Pallas revisiting pattern).
+Vertex reordering (paper §5) now has a measurable TPU cost model: it shrinks
+``num_tiles`` and raises ``occupancy`` (edges per stored tile).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import Graph
+
+TILE = 128
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TiledGraph:
+    """Block-sparse adjacency (see module docstring)."""
+    prob: jnp.ndarray        # (nt, T, T) float32
+    edge_id: jnp.ndarray     # (nt, T, T) uint32   (0 ok: prob gates validity)
+    tile_src: jnp.ndarray    # (nt,) int32   source block index
+    tile_dst: jnp.ndarray    # (nt,) int32   destination block index (sorted)
+    first_of_dst: jnp.ndarray  # (nt,) int32  1 ⇒ first tile of its dst run
+    num_vertices: int = dataclasses.field(metadata=dict(static=True))
+    num_edges: int = dataclasses.field(metadata=dict(static=True))
+    tile_size: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.prob.shape[0])
+
+    @property
+    def padded_vertices(self) -> int:
+        return -(-self.num_vertices // self.tile_size) * self.tile_size
+
+    @property
+    def occupancy(self) -> float:
+        """Edges per stored tile slot — the reordering cost model."""
+        nt = max(self.num_tiles, 1)
+        return self.num_edges / (nt * self.tile_size ** 2)
+
+
+def dedupe_edges(src: np.ndarray, dst: np.ndarray, prob: np.ndarray):
+    """Combine parallel (src, dst) duplicates: p = 1 - Π(1 - p_i).
+
+    A dense tile has one slot per (src, dst) pair; multi-edges must merge.
+    The union-probability merge preserves the IC activation distribution.
+    """
+    key = src.astype(np.int64) * (dst.max() + 1 if len(dst) else 1) + dst
+    order = np.argsort(key, kind="stable")
+    key, src, dst, prob = key[order], src[order], dst[order], prob[order]
+    uniq, first, inv = np.unique(key, return_index=True, return_inverse=True)
+    log_keep = np.log1p(-np.clip(prob, 0.0, 1.0 - 1e-7))
+    acc = np.zeros(len(uniq))
+    np.add.at(acc, inv, log_keep)
+    return src[first], dst[first], (1.0 - np.exp(acc)).astype(np.float32)
+
+
+def from_graph(g: Graph, tile_size: int = TILE,
+               pad_tiles_to: int | None = None) -> TiledGraph:
+    """Extract the non-empty tile list from a CSR graph (host-side)."""
+    e = g.num_edges
+    src = np.asarray(g.src)[:e]
+    dst = np.asarray(g.dst)[:e]
+    prob = np.asarray(g.prob)[:e]
+    eid = np.arange(e, dtype=np.uint32)
+
+    ts, td = src // tile_size, dst // tile_size
+    tile_key = td.astype(np.int64) * (ts.max() + 1) + ts   # sort by dst, then src
+    order = np.argsort(tile_key, kind="stable")
+    src, dst, prob, eid, ts, td = (a[order] for a in (src, dst, prob, eid, ts, td))
+    tile_key = tile_key[order]
+
+    uniq, inv = np.unique(tile_key, return_inverse=True)
+    nt = len(uniq)
+    P = np.zeros((nt, tile_size, tile_size), np.float32)
+    E = np.zeros((nt, tile_size, tile_size), np.uint32)
+    li, lj = src % tile_size, dst % tile_size
+    # Duplicate (src, dst) pairs must have been merged (dedupe_edges) — check.
+    flat = inv.astype(np.int64) * tile_size * tile_size + li * tile_size + lj
+    if len(np.unique(flat)) != len(flat):
+        raise ValueError("parallel edges present — run tiles.dedupe_edges / "
+                         "csr.from_edges(..., dedupe=True) first")
+    P.reshape(-1)[flat] = prob
+    E.reshape(-1)[flat] = eid
+
+    t_src = np.zeros(nt, np.int32)
+    t_dst = np.zeros(nt, np.int32)
+    t_src = (uniq % (ts.max() + 1)).astype(np.int32)
+    t_dst = (uniq // (ts.max() + 1)).astype(np.int32)
+    first = np.ones(nt, np.int32)
+    first[1:] = (t_dst[1:] != t_dst[:-1]).astype(np.int32)
+
+    if pad_tiles_to is not None:
+        if pad_tiles_to < nt:
+            raise ValueError(f"pad_tiles_to={pad_tiles_to} < num_tiles={nt}")
+        pad = pad_tiles_to - nt
+        if pad:
+            P = np.concatenate([P, np.zeros((pad, tile_size, tile_size), np.float32)])
+            E = np.concatenate([E, np.zeros((pad, tile_size, tile_size), np.uint32)])
+            # Padding tiles re-target the last dst block with prob 0 and are
+            # never "first" — pure no-ops that keep shapes static.
+            t_src = np.concatenate([t_src, np.full(pad, t_src[-1], np.int32)])
+            t_dst = np.concatenate([t_dst, np.full(pad, t_dst[-1], np.int32)])
+            first = np.concatenate([first, np.zeros(pad, np.int32)])
+
+    return TiledGraph(
+        prob=jnp.asarray(P), edge_id=jnp.asarray(E),
+        tile_src=jnp.asarray(t_src), tile_dst=jnp.asarray(t_dst),
+        first_of_dst=jnp.asarray(first),
+        num_vertices=g.num_vertices, num_edges=e, tile_size=tile_size)
+
+
+def tile_stats(tg: TiledGraph) -> dict:
+    """Reordering benchmark metrics (Fig. 5 analogue, TPU cost model)."""
+    nblocks = tg.padded_vertices // tg.tile_size
+    return dict(
+        num_tiles=tg.num_tiles,
+        possible_tiles=nblocks * nblocks,
+        tile_fill_fraction=tg.num_tiles / max(nblocks * nblocks, 1),
+        occupancy=tg.occupancy,
+    )
+
+
+def pad_mask_rows(mask: jnp.ndarray, padded_vertices: int) -> jnp.ndarray:
+    pad = padded_vertices - mask.shape[0]
+    return jnp.pad(mask, ((0, pad), (0, 0))) if pad else mask

@@ -1,0 +1,221 @@
+"""Sharding rules for the LM substrate (DESIGN.md §3).
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  Strategy:
+
+* **FSDP/ZeRO-3**: parameters and optimizer state sharded over the composite
+  ``fsdp = (pod, data)`` axes on their largest non-tensor-parallel dim;
+  GSPMD inserts the per-layer all-gathers.
+* **TP (megatron)**: heads / FFN width / vocab / experts sharded on
+  ``model``; paired projections are sharded in/out so each block needs one
+  reduce per direction.
+* **SP**: layer-boundary activations shard sequence on ``model``.
+
+Rules are *path-pattern → logical spec*; an axis that does not divide the
+mesh (e.g. 8 KV heads on 16-way model) silently drops to replicated — the
+fallback every production framework needs for odd head counts.
+
+``set_mesh`` installs a process-global mesh so model code can annotate
+activations without threading a mesh argument through every call.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]):
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def fsdp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def sanitize(mesh: Mesh, spec: P, shape) -> P:
+    """Drop spec axes that are absent from the mesh or don't divide; trim
+    specs longer than the value's rank (e.g. MLP applied to pre-flattened
+    (N, D) tokens)."""
+    out = []
+    spec = P(*tuple(spec)[: len(shape)])
+    for dim, axis in enumerate(spec):
+        if axis is None:
+            out.append(None)
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        if not axes:
+            out.append(None)
+            continue
+        axes = axes if len(axes) > 1 else axes
+        if dim < len(shape) and shape[dim] % _axis_size(mesh, axes) == 0:
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def shard(x, *spec_axes):
+    """Activation sharding constraint; no-op when no mesh installed."""
+    if _MESH is None:
+        return x
+    spec = sanitize(_MESH, P(*spec_axes), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def shard_first(x, candidates):
+    """Constrain with the first candidate spec whose every axis divides —
+    e.g. attention: shard heads if they divide the model axis, else shard
+    query rows (sequence).  Candidates are tuples of spec axes."""
+    if _MESH is None:
+        return x
+    for cand in candidates:
+        spec = P(*cand)
+        if sanitize(_MESH, spec, x.shape) == spec:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(_MESH, spec))
+    return shard(x, *candidates[-1])
+
+
+def batch_axes() -> tuple:
+    """Logical batch axes — ('pod','data') shrunk to whatever exists."""
+    if _MESH is None:
+        return ("data",)
+    return fsdp_axes(_MESH)
+
+
+# --------------------------------------------------------------- param rules
+# Pattern → spec builder(shape) using logical names; leading layer-stack dims
+# are padded with None automatically (match is on the trailing rank).
+_F = "__fsdp__"          # placeholder replaced by the mesh's fsdp axes
+
+
+def _rules():
+    """pattern → candidate specs, best-first.  Secondary candidates shard
+    head_dim / alternate axes when head counts don't divide the model axis
+    (e.g. 24 Q heads or 8 KV heads on a 16-way model axis)."""
+    return [
+        (r"embedding$", [(None, _F)]),          # (V, D): vocab rep, D fsdp
+        (r"unembed$", [(_F, "model")]),         # (D, V)
+        (r"patch_proj$", [(_F, None)]),
+        (r"wq$", [(_F, "model", None), (_F, None, "model")]),
+        (r"wk$", [(_F, "model", None), (_F, None, "model")]),
+        (r"wv$", [(_F, "model", None), (_F, None, "model")]),
+        (r"bq$", [("model", None), (None, "model")]),
+        (r"bk$", [("model", None), (None, "model")]),
+        (r"bv$", [("model", None), (None, "model")]),
+        (r"wo$", [("model", None, _F), (None, "model", _F)]),
+        (r"w_dq$", [(_F, None)]),               # MLA down projections
+        (r"w_dkv$", [(_F, None)]),
+        (r"w_uq$", [(None, "model", None), (None, None, "model")]),
+        (r"w_uk$", [(None, "model", None), (None, None, "model")]),
+        (r"w_uv$", [(None, "model", None), (None, None, "model")]),
+        (r"w1$", [(_F, "model")]),              # (D, F)
+        (r"w3$", [(_F, "model")]),
+        (r"w2$", [("model", _F)]),              # (F, D)
+        (r"router$", [(_F, None)]),             # (D, E)
+        (r"experts_w1$", [("model", _F, None)]),  # (E, D, Fe): EP on experts
+        (r"experts_w3$", [("model", _F, None)]),
+        (r"experts_w2$", [("model", None, _F)]),  # (E, Fe, D)
+        (r"in_proj$", [(_F, "model")]),         # mamba (D, inner-cat)
+        (r"out_proj$", [("model", _F)]),        # (di, D)
+        (r"conv$", [(None, "model")]),          # (w, channels)
+        (r"(a_log|d_skip|dt_bias)$", [("model",)]),
+        (r"(scale|norm.*)$", [(None,)]),        # norms replicated
+    ]
+
+
+def spec_candidates(path: str, shape) -> list[P]:
+    """Candidate PartitionSpecs for one param leaf (mesh-independent)."""
+    for pat, cands in _rules():
+        if re.search(pat, path):
+            out = []
+            for spec in cands:
+                pad = len(shape) - len(spec)
+                out.append(P(*((None,) * pad + tuple(spec))))
+            return out
+    return [P(*(None,) * len(shape))]
+
+
+def spec_for(path: str, shape) -> P:
+    return spec_candidates(path, shape)[0]
+
+
+def _concretize_one(mesh: Mesh, spec: P, shape) -> P:
+    fs = fsdp_axes(mesh)
+    fs = fs if len(fs) > 1 else (fs[0] if fs else None)
+    spec = P(*(fs if a == _F else a for a in spec))
+    return sanitize(mesh, spec, shape)
+
+
+def _shard_ways(mesh: Mesh, spec: P) -> int:
+    ways = 1
+    for a in spec:
+        if a is not None:
+            ways *= _axis_size(mesh, a)
+    return ways
+
+
+def concretize(mesh: Mesh, path: str, shape) -> P:
+    """Pick the candidate that keeps the most sharding after sanitize
+    (best-first on ties)."""
+    best, best_ways = None, 0
+    for cand in spec_candidates(path, shape):
+        spec = _concretize_one(mesh, cand, shape)
+        ways = _shard_ways(mesh, spec)
+        if ways > best_ways:
+            best, best_ways = spec, ways
+    return best if best is not None else P(*(None,) * len(shape))
+
+
+def constrain_params(tree):
+    """Re-assert each param leaf's rule sharding INSIDE a scan body.
+
+    Without this, GSPMD hoists the FSDP all-gather of the whole stacked
+    layer array out of the scan — params for every layer sit gathered in
+    HBM at once (nemotron-340b: +33 GB/device temp).  Constraining the
+    *sliced* per-layer tree forces slice-first-gather-later: one layer
+    gathered at a time (§Perf iteration N1)."""
+    if _MESH is None:
+        return tree
+    flat, td = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        spec = concretize(_MESH, name, leaf.shape)
+        out.append(jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(_MESH, spec)))
+    return jax.tree_util.tree_unflatten(td, out)
+
+
+def param_shardings(mesh: Mesh, param_shapes) -> dict:
+    """NamedSharding tree matching a params pytree (of ShapeDtypeStructs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append(NamedSharding(mesh, concretize(mesh, name, leaf.shape)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,105 @@
+"""Static-shape CSR graph structures for JAX.
+
+The GPU codes traverse an in-memory CSR with dynamic frontier queues.  XLA
+wants static shapes, so we carry CSR as plain dense arrays plus a flat
+edge-centric view (``src[e], dst[e], prob[e]``) that the dense edge-centric
+traversal path sweeps every level.  Padding edges point at a sink row with
+probability 0 so they can never activate anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Directed graph in flat edge-list + CSR form (all static shapes).
+
+    Attributes:
+      indptr:  (V+1,) int32 CSR row pointers (sorted by src).
+      src:     (E_pad,) int32 edge sources (CSR order; padding = V sentinel row
+               redirected to 0 with prob 0).
+      dst:     (E_pad,) int32 edge destinations.
+      prob:    (E_pad,) float32 IC activation probability per edge.
+      num_vertices / num_edges: static python ints (E = real edge count).
+    """
+    indptr: jnp.ndarray
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    prob: jnp.ndarray
+    num_vertices: int = dataclasses.field(metadata=dict(static=True))
+    num_edges: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def padded_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    def degrees(self) -> jnp.ndarray:
+        return self.indptr[1:] - self.indptr[:-1]
+
+
+def from_edges(src: np.ndarray, dst: np.ndarray, prob: np.ndarray,
+               num_vertices: int, pad_to: Optional[int] = None,
+               dedupe: bool = False) -> Graph:
+    """Build a CSR-ordered Graph from an edge list (numpy, host-side).
+
+    ``dedupe=True`` merges parallel (src, dst) edges with the IC-preserving
+    union probability — required by the dense-tile layout (core/tiles.py).
+    """
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    prob = np.asarray(prob, np.float32)
+    if dedupe:
+        from repro.core.tiles import dedupe_edges
+        src, dst, prob = dedupe_edges(src, dst, prob)
+    order = np.argsort(src, kind="stable")
+    src, dst, prob = src[order], dst[order], prob[order]
+    counts = np.bincount(src, minlength=num_vertices)
+    indptr = np.zeros(num_vertices + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    e = len(src)
+    pad_to = pad_to or e
+    if pad_to < e:
+        raise ValueError(f"pad_to={pad_to} < num_edges={e}")
+    pad = pad_to - e
+    if pad:
+        src = np.concatenate([src, np.zeros(pad, np.int32)])
+        dst = np.concatenate([dst, np.zeros(pad, np.int32)])
+        prob = np.concatenate([prob, np.zeros(pad, np.float32)])
+    return Graph(
+        indptr=jnp.asarray(indptr, jnp.int32),
+        src=jnp.asarray(src),
+        dst=jnp.asarray(dst),
+        prob=jnp.asarray(prob),
+        num_vertices=int(num_vertices),
+        num_edges=int(e),
+    )
+
+
+def transpose(g: Graph) -> Graph:
+    """Reverse every edge — RRR sets run the diffusion backwards (Def. 2)."""
+    src = np.asarray(g.dst)[: g.num_edges]
+    dst = np.asarray(g.src)[: g.num_edges]
+    prob = np.asarray(g.prob)[: g.num_edges]
+    return from_edges(src, dst, prob, g.num_vertices, pad_to=g.padded_edges)
+
+
+def relabel(g: Graph, perm: np.ndarray) -> Graph:
+    """Apply a vertex permutation: new_id = perm[old_id] (reordering §5)."""
+    perm = np.asarray(perm, np.int32)
+    src = perm[np.asarray(g.src)[: g.num_edges]]
+    dst = perm[np.asarray(g.dst)[: g.num_edges]]
+    prob = np.asarray(g.prob)[: g.num_edges]
+    return from_edges(src, dst, prob, g.num_vertices, pad_to=g.padded_edges)
+
+
+def uniform_probs(rng: np.random.Generator, num_edges: int,
+                  low: float = 0.0, high: float = 1.0) -> np.ndarray:
+    """Paper §6: edge weights drawn uniformly, generated once and reused."""
+    return rng.uniform(low, high, size=num_edges).astype(np.float32)

@@ -1,0 +1,92 @@
+"""1-D vertex partition of a TiledGraph for graph-parallel traversal.
+
+Beyond-paper (DESIGN.md §3): the paper keeps a full graph replica per GPU;
+we additionally shard the graph itself over the mesh "model" axis so inputs
+larger than one HBM run at all.  Shard ``s`` owns destination blocks
+``[s·nbₗ, (s+1)·nbₗ)`` — its rows of frontier/visited — plus every adjacency
+tile whose *destination* falls in that range (so each shard writes only local
+rows; sources arrive via an all-gather of the frontier each level).
+
+All shards carry identical array shapes (tile lists padded to the max shard
+count with inert prob-0 tiles) so the stack can live under one shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tiles
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PartitionedTiledGraph:
+    """Stacked per-shard tile lists (leading dim = shards)."""
+    prob: jnp.ndarray        # (S, ntₘ, T, T) float32
+    edge_id: jnp.ndarray     # (S, ntₘ, T, T) uint32
+    tile_src: jnp.ndarray    # (S, ntₘ) int32  — GLOBAL source block
+    tile_dst: jnp.ndarray    # (S, ntₘ) int32  — LOCAL destination block
+    first_of_dst: jnp.ndarray  # (S, ntₘ) int32
+    num_vertices: int = dataclasses.field(metadata=dict(static=True))
+    num_edges: int = dataclasses.field(metadata=dict(static=True))
+    tile_size: int = dataclasses.field(metadata=dict(static=True))
+    num_shards: int = dataclasses.field(metadata=dict(static=True))
+    blocks_per_shard: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def padded_vertices(self) -> int:
+        return self.num_shards * self.blocks_per_shard * self.tile_size
+
+    @property
+    def rows_per_shard(self) -> int:
+        return self.blocks_per_shard * self.tile_size
+
+
+def partition(tg: tiles.TiledGraph, num_shards: int) -> PartitionedTiledGraph:
+    """Split a TiledGraph into ``num_shards`` destination-row shards."""
+    T = tg.tile_size
+    n_blocks_raw = -(-tg.num_vertices // T)
+    nb_loc = -(-n_blocks_raw // num_shards)
+    n_blocks = nb_loc * num_shards
+
+    t_src = np.asarray(tg.tile_src)
+    t_dst = np.asarray(tg.tile_dst)
+    prob = np.asarray(tg.prob)
+    eid = np.asarray(tg.edge_id)
+    first = np.asarray(tg.first_of_dst)
+
+    shard_of = t_dst // nb_loc
+    counts = np.bincount(shard_of, minlength=num_shards)
+    nt_max = max(int(counts.max()), 1)
+
+    P = np.zeros((num_shards, nt_max, T, T), np.float32)
+    E = np.zeros((num_shards, nt_max, T, T), np.uint32)
+    TS = np.zeros((num_shards, nt_max), np.int32)
+    TD = np.zeros((num_shards, nt_max), np.int32)
+    FI = np.zeros((num_shards, nt_max), np.int32)
+    for s in range(num_shards):
+        idx = np.flatnonzero(shard_of == s)
+        k = len(idx)
+        if k:
+            P[s, :k] = prob[idx]
+            E[s, :k] = eid[idx]
+            TS[s, :k] = t_src[idx]
+            TD[s, :k] = t_dst[idx] - s * nb_loc
+            FI[s, :k] = first[idx]
+            # ``first`` was computed on the global sorted order; within a
+            # shard the first tile of the run is always first.
+            FI[s, 0] = 1
+            if k < nt_max:                      # inert padding, last local dst
+                TD[s, k:] = TD[s, k - 1]
+                TS[s, k:] = TS[s, k - 1]
+        else:                                   # empty shard: one no-op tile
+            FI[s, 0] = 1
+    return PartitionedTiledGraph(
+        prob=jnp.asarray(P), edge_id=jnp.asarray(E),
+        tile_src=jnp.asarray(TS), tile_dst=jnp.asarray(TD),
+        first_of_dst=jnp.asarray(FI),
+        num_vertices=tg.num_vertices, num_edges=tg.num_edges,
+        tile_size=T, num_shards=num_shards, blocks_per_shard=nb_loc)

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: max-k-cover marginal-gain counts.
+
+Seed selection (Listing 1 lines 18-21 + IMM's greedy max-cover) reduces the
+(V, W) visited bitmask against the mask of still-uncovered colors:
+
+    counts[v] = Σ_w popcount(visited[v, w] & active[w])
+
+On GPUs this is the atomic-append RRR-set construction; on TPU it is a
+bandwidth-bound row sweep — one grid step reduces a (T, W) row block in VMEM
+with SWAR popcounts and writes a (1, T) count row (lane dim = T = 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import bitmask
+
+
+def _coverage_kernel(vis_ref, act_ref, out_ref):
+    vis = vis_ref[...]                       # (T, W) uint32
+    act = act_ref[...]                       # (1, W) uint32
+    counts = jnp.sum(bitmask.popcount(vis & act), axis=-1)
+    out_ref[0, :] = counts.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def cover_counts(visited, active, *, block_rows: int = 128, interpret=True):
+    """counts[v] = popcount(visited[v] & active) — see module docstring.
+
+    visited: (Vp, W) uint32 with Vp a multiple of ``block_rows``.
+    active:  (W,) uint32 mask of not-yet-covered colors.
+    """
+    Vp, W = visited.shape
+    T = block_rows
+    assert Vp % T == 0, f"pad rows to a multiple of {T}"
+    n_blocks = Vp // T
+    out = pl.pallas_call(
+        _coverage_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((T, W), lambda i: (i, 0)),
+            pl.BlockSpec((1, W), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, T), jnp.int32),
+        interpret=interpret,
+    )(visited, active[None, :])
+    return out.reshape(Vp)

@@ -1,0 +1,46 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+``interpret`` auto-detection: kernels run compiled on TPU backends and in
+interpret mode (Python evaluation of the kernel body) everywhere else — this
+container is CPU-only, so tests/benches exercise interpret mode while the
+BlockSpecs/grids target real TPU lowering.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tiles as tiles_lib
+from repro.kernels import coverage as _coverage
+from repro.kernels import fused_expand as _fused_expand
+from repro.kernels import flash_attention as _flash
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fused_expand(tg: tiles_lib.TiledGraph, frontier, visited, seed, level):
+    """One fused-BPT expansion level on a TiledGraph (padded row masks)."""
+    return _fused_expand.fused_expand(
+        tg.prob, tg.edge_id, tg.tile_src, tg.tile_dst, tg.first_of_dst,
+        frontier, visited, jnp.uint32(seed), jnp.uint32(level),
+        interpret=_interpret())
+
+
+def cover_counts(visited, active):
+    """Marginal-gain counts for greedy max-k-cover (rows padded to 128)."""
+    Vp = visited.shape[0]
+    pad = (-Vp) % 128
+    if pad:
+        visited = jnp.pad(visited, ((0, pad), (0, 0)))
+    out = _coverage.cover_counts(visited, active, interpret=_interpret())
+    return out[:Vp] if pad else out
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None, kv_offset=0,
+                    block_q=128, block_k=128):
+    """Blocked online-softmax attention (prefill hot-spot)."""
+    return _flash.flash_attention(
+        q, k, v, causal=causal, scale=scale, kv_offset=kv_offset,
+        block_q=block_q, block_k=block_k, interpret=_interpret())

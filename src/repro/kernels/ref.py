@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the *definition* of its kernel's semantics; kernel tests
+sweep shapes/dtypes and assert bit-exact (integer kernels) or allclose
+(float kernels) agreement in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmask, rng
+
+
+def fused_expand_ref(prob, edge_id, tile_src, tile_dst, frontier, visited,
+                     seed, level):
+    """Oracle for kernels.fused_expand — one level of tile-based expansion.
+
+    Args:
+      prob:     (nt, T, T) f32 tile activation probabilities (0 ⇒ no edge).
+      edge_id:  (nt, T, T) uint32 CSR edge ids (RNG counters).
+      tile_src: (nt,) i32 source block per tile (indexes ``frontier``).
+      tile_dst: (nt,) i32 destination block per tile (indexes ``visited``).
+      frontier: (Vf, W) uint32 packed color mask (padded rows).
+      visited:  (Vo, W) uint32 — ALREADY folded with the current frontier.
+                Vo == Vf single-device; Vo = shard rows graph-parallel.
+      seed, level: uint32 RNG counters.
+    Returns:
+      next_frontier (Vo, W) uint32 = OR over tiles of
+        OR_i( frontier[src_i] & Bernoulli_word(edge) ) & ~visited[dst]
+    """
+    T = prob.shape[1]
+    W = frontier.shape[1]
+    n_blocks = visited.shape[0] // T
+    fr_blocks = frontier.reshape(-1, T, W)
+    vis_blocks = visited.reshape(n_blocks, T, W)
+
+    def one_tile(p, eid, ts, td):
+        F = fr_blocks[ts]                                   # (T, W)
+        V = vis_blocks[td]                                  # (T, W)
+        word_ids = jnp.arange(W, dtype=jnp.uint32)
+        # (T, T, W): Bernoulli word for every (src-lane, dst-lane, word).
+        rand = jax.vmap(
+            lambda w: rng.bernoulli_word(seed, level, eid, w, p),
+            out_axes=-1)(word_ids)
+        x = F[:, None, :] & rand                            # (T, T, W)
+        contrib = jax.lax.reduce(x, jnp.uint32(0),
+                                 jnp.bitwise_or, (0,))      # (T, W) per dst
+        return contrib & ~V
+
+    contribs = jax.vmap(one_tile)(prob, edge_id, tile_src, tile_dst)  # (nt,T,W)
+    out = jnp.zeros_like(visited).reshape(n_blocks, T, W)
+    out = bitmask.pack_bits(
+        bitmask.unpack_bits(out).at[tile_dst].max(bitmask.unpack_bits(contribs)))
+    return out.reshape(-1, W)
+
+
+def cover_counts_ref(visited, active):
+    """Oracle for kernels.coverage — marginal-gain counts for max-k-cover.
+
+    counts[v] = |{colors c : visited[v, c] ∧ active[c]}|
+    """
+    return jnp.sum(bitmask.popcount(visited & active[None, :]),
+                   axis=-1).astype(jnp.int32)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None, kv_offset=0):
+    """Oracle for kernels.flash_attention — plain softmax attention.
+
+    q: (Lq, H, D), k/v: (Lk, H, D).  ``kv_offset`` shifts query positions for
+    decode (query i attends keys ≤ i + kv_offset).
+    """
+    d = q.shape[-1]
+    scale = scale or d ** -0.5
+    logits = jnp.einsum("qhd,khd->hqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(q.shape[0])[:, None] + kv_offset
+        ki = jnp.arange(k.shape[0])[None, :]
+        logits = jnp.where((ki <= qi)[None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", p, v.astype(jnp.float32)).astype(q.dtype)

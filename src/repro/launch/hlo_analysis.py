@@ -1,0 +1,241 @@
+"""Post-partitioning HLO analysis: loop-weighted FLOPs, HBM bytes, and
+collective bytes for §Roofline.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE — useless for
+scan-over-layers programs where ~all compute lives inside loops — and has no
+collective accounting at all.  This parser walks ``compiled.as_text()``:
+
+* **trip counts**: lax.scan lowers to ``while`` whose condition compares the
+  induction variable against a literal ``constant(N)``; we read N out of the
+  condition computation (max s32 constant — scan conds contain only the
+  bound).  Dynamic whiles (traversal level loops) count once (documented).
+* **FLOPs**: every ``dot`` contributes 2·|result|·|contraction| (operand
+  shapes resolved through a per-computation SSA name→type map); recursion
+  descends into fusions, calls, and loop bodies (× trips).
+* **HBM bytes**: per top-level op, operand + result bytes (XLA cost-model
+  semantics), skipping pure aliasing ops; fusion internals are NOT counted
+  (their operands/results already are — that is the fusion's point).
+* **collective bytes**: result bytes × op factor (all-reduce 2× — ring
+  sends + receives every byte twice; others 1×), loop-weighted.
+
+All numbers are per-device (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_OP_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"             # result name
+    r"((?:\([^()]*\)|[\w\[\],]+(?:\{[\d,]*\})?))\s+"  # result type (+layout;
+    r"([\w\-]+)\(")           # tuple types are paren-free inside + comments
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+_ALIAS_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+              "bitcast", "iota", "after-all", "partition-id", "replica-id"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[list[int]]:
+    """All array shapes in a (possibly tuple) type string."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append([int(d) for d in dims.split(",") if d])
+    return out
+
+
+def parse_computations(hlo_text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" "):
+            m = _HEADER_RE.match(line.strip())
+            if m and "->" in line:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+            if line.strip() == "}":
+                cur = None
+            continue
+        stripped = line.strip()
+        if cur is not None and "=" in stripped:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _entry_name(hlo_text: str) -> str:
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo_text)
+    return m.group(1)
+
+
+def _max_s32_constant(lines: list[str]) -> int | None:
+    best = None
+    for ln in lines:
+        m = re.search(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)", ln)
+        if m:
+            v = int(m.group(1))
+            best = v if best is None else max(best, v)
+    return best
+
+
+def _refs(line: str) -> dict[str, str]:
+    out = {}
+    for key in ("to_apply", "calls", "body", "condition"):
+        m = re.search(key + r"=%?([\w\.\-]+)", line)
+        if m:
+            out[key] = m.group(1)
+    return out
+
+
+def _dot_flops(line: str, result_type: str, types: dict[str, str]) -> float:
+    dims = _shape_dims(result_type)
+    if not dims:
+        return 0.0
+    result_elems = 1
+    for d in dims[0]:
+        result_elems *= d
+    m = re.search(r"dot\(%?([\w\.\-]+),", line)
+    lhs_shape = None
+    if m and m.group(1) in types:
+        shapes = _shape_dims(types[m.group(1)])
+        lhs_shape = shapes[0] if shapes else None
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contraction = 1
+    if lhs_shape and cm and cm.group(1):
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_shape):
+                contraction *= lhs_shape[i]
+    return 2.0 * result_elems * contraction
+
+
+class HloCost:
+    """Loop-weighted per-device cost walk (see module docstring)."""
+
+    def __init__(self, hlo_text: str):
+        self.comps = parse_computations(hlo_text)
+        self.entry = _entry_name(hlo_text)
+        self.types: dict[str, dict[str, str]] = {}
+        for name, lines in self.comps.items():
+            t = {}
+            for ln in lines:
+                m = _OP_RE.match(ln)
+                if m:
+                    t[m.group(1)] = m.group(2)
+            self.types[name] = t
+        self._memo: dict[str, dict] = {}
+
+    def _visit(self, name: str) -> dict:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = defaultdict(float)     # cycle guard
+        tot = defaultdict(float)
+        types = self.types.get(name, {})
+        for ln in self.comps.get(name, ()):
+            m = _OP_RE.match(ln)
+            if not m:
+                continue
+            _, rtype, op = m.groups()
+            refs = _refs(ln)
+            if op in _COLLECTIVES:
+                b = _shape_bytes(rtype)
+                tot["coll_" + op] += b * _FACTOR[op]
+                tot["ops_" + op] += 1
+                tot["bytes"] += b * 2              # also HBM in/out
+            elif op == "while":
+                trips = 1
+                if "condition" in refs:
+                    c = _max_s32_constant(
+                        self.comps.get(refs["condition"], []))
+                    trips = c if c else 1
+                for key in ("body", "condition"):
+                    if key in refs:
+                        sub = self._visit(refs[key])
+                        for k, v in sub.items():
+                            tot[k] += v * trips
+            elif op == "conditional":
+                for r in refs.values():
+                    sub = self._visit(r)
+                    for k, v in sub.items():
+                        tot[k] += v
+            elif op == "dot":
+                tot["flops"] += _dot_flops(ln, rtype, types)
+                tot["bytes"] += self._op_bytes(ln, op, rtype, types)
+            elif op == "fusion":
+                # fusion's own operands/result are the HBM traffic; descend
+                # only for flops + collectives hidden inside
+                tot["bytes"] += self._op_bytes(ln, op, rtype, types)
+                if "calls" in refs:
+                    sub = self._visit(refs["calls"])
+                    tot["flops"] += sub.get("flops", 0.0)
+                    for k, v in sub.items():
+                        if k.startswith(("coll_", "ops_")):
+                            tot[k] += v
+            elif op in ("call", "custom-call", "async-start"):
+                tot["bytes"] += self._op_bytes(ln, op, rtype, types)
+                for key in ("to_apply", "calls"):
+                    if key in refs:
+                        sub = self._visit(refs[key])
+                        for k, v in sub.items():
+                            tot[k] += v
+            elif op in _ALIAS_OPS:
+                continue
+            else:
+                tot["bytes"] += self._op_bytes(ln, op, rtype, types)
+        self._memo[name] = tot
+        return tot
+
+    def _op_bytes(self, line: str, op: str, rtype: str, types: dict) -> float:
+        b = float(_shape_bytes(rtype))
+        m = re.search(re.escape(op) + r"\(([^)]*)\)", line)
+        if m:
+            for arg in m.group(1).split(","):
+                arg = arg.strip().lstrip("%")
+                if arg in types:
+                    b += _shape_bytes(types[arg])
+        return b
+
+    def analyze(self) -> dict:
+        tot = self._visit(self.entry)
+        coll = {k[5:]: v for k, v in tot.items() if k.startswith("coll_")}
+        ops = {k[4:]: int(v) for k, v in tot.items() if k.startswith("ops_")}
+        return {
+            "flops": tot.get("flops", 0.0),
+            "bytes": tot.get("bytes", 0.0),
+            "collective": {
+                "per_device_bytes": sum(coll.values()),
+                "by_kind": coll,
+                "op_counts": ops,
+            },
+        }
+
+
+def full_cost(hlo_text: str) -> dict:
+    return HloCost(hlo_text).analyze()
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    return full_cost(hlo_text)["collective"]

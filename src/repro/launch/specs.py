@@ -1,0 +1,109 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+The shannon/kernels pattern: weak-type-correct, shardable, zero allocation.
+``input_specs`` returns the exact pytrees the lowered step functions take;
+``*_shardings`` return matching NamedSharding trees for ``in_shardings``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding_rules as rules
+from repro.models import common, decode, model
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import adamw
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *, with_labels=True):
+    B, L = shape.global_batch, shape.seq_len
+    out = {}
+    if cfg.num_codebooks:
+        out["tokens"] = _sds((B, cfg.num_codebooks, L), jnp.int32)
+        if with_labels:
+            out["labels"] = _sds((B, cfg.num_codebooks, L), jnp.int32)
+    else:
+        Lt = L - cfg.num_patches
+        out["tokens"] = _sds((B, Lt), jnp.int32)
+        if with_labels:
+            out["labels"] = _sds((B, Lt), jnp.int32)
+    if cfg.num_patches:
+        out["patch_embeds"] = _sds((B, cfg.num_patches,
+                                    model.PATCH_EMBED_DIM), jnp.bfloat16)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(caches, tokens, cur_len) stand-ins for serve_step."""
+    B, L = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(lambda: decode.init_caches(cfg, B, L))
+    tok = (_sds((B, cfg.num_codebooks, 1), jnp.int32) if cfg.num_codebooks
+           else _sds((B, 1), jnp.int32))
+    return caches, tok, _sds((), jnp.int32)
+
+
+def param_specs(cfg: ModelConfig):
+    return model.param_shapes(cfg)
+
+
+def opt_specs(cfg: ModelConfig, params_shapes):
+    dt = common.dtype_of(cfg.optimizer_state_dtype)
+    return jax.eval_shape(lambda: adamw.init(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params_shapes),
+        dt))
+
+
+# ------------------------------------------------------------- shardings
+def batch_shardings(mesh: Mesh, batch_shapes):
+    dp = rules.fsdp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def one(path, leaf):
+        spec = P(dp, *([None] * (len(leaf.shape) - 1)))
+        return NamedSharding(mesh, rules.sanitize(mesh, spec, leaf.shape))
+
+    flat, td = jax.tree_util.tree_flatten_with_path(batch_shapes)
+    return jax.tree_util.tree_unflatten(
+        td, [one(p, l) for p, l in flat])
+
+
+_CACHE_RULES = [
+    ("k_rope", (None, "__dp__", "model", None)),
+    ("conv", (None, "__dp__", None, "model")),
+    ("state", (None, "__dp__", "model", None, None)),
+    ("k", (None, "__dp__", "model", None, None)),
+    ("v", (None, "__dp__", "model", None, None)),
+    ("c", (None, "__dp__", "model", None)),
+]
+
+
+def cache_shardings(mesh: Mesh, cache_shapes):
+    """Decode caches: sequence axis sharded over "model" (seq-parallel
+    flash-decode), batch over the data axes, leading group dim replicated."""
+    dp = rules.fsdp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        for key, spec in _CACHE_RULES:
+            if name == key:
+                spec = tuple(dp if a == "__dp__" else a for a in spec)
+                spec = P(*spec[: len(leaf.shape)])
+                return NamedSharding(mesh,
+                                     rules.sanitize(mesh, spec, leaf.shape))
+        return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+
+    flat, td = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(td, [one(p, l) for p, l in flat])
+
+
+def opt_shardings(mesh: Mesh, opt_shapes, param_sh):
+    """Adam moments shard exactly like their parameters (ZeRO)."""
+    return adamw.AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=param_sh, v=param_sh)

@@ -1,0 +1,279 @@
+"""Attention variants: GQA (llama/qwen/nemotron/command-r/musicgen/phi3) and
+MLA (deepseek-v3), in blocked memory-efficient form.
+
+Prefill/train never materialize (L, L): an outer ``lax.map`` over query
+blocks runs an inner online-softmax scan over KV blocks (the pure-XLA twin
+of kernels/flash_attention.py — used for lowering/dry-run so cost_analysis
+sees real HLO; the Pallas kernel is the TPU execution path).
+
+MLA keeps the latent cache: prefill projects K/V per *block* from the
+compressed c_kv inside the scan (never a full (L, H, hd) K tensor); decode
+uses the absorbed formulation (q projected into latent space) so the cache
+is (B, L, kv_rank + rope_dim) — the paper-exact memory win of MLA.
+
+Decode shards the KV cache's *sequence* axis over "model" (sequence-parallel
+flash-decode): softmax over a sharded axis lowers to partial max/sum +
+all-reduce under GSPMD — collective-light and HBM-balanced.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding_rules import batch_axes, shard, shard_first
+from repro.models import common
+from repro.models.config import ModelConfig
+
+_NEG = -1e30
+
+
+# ------------------------------------------------------------------- init
+def init_gqa(key, cfg: ModelConfig):
+    ks = common.keygen(key)
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = common.dtype_of(cfg.dtype)
+    p = {
+        "wq": common.dense_init(next(ks), d, (h, hd), dt),
+        "wk": common.dense_init(next(ks), d, (kvh, hd), dt),
+        "wv": common.dense_init(next(ks), d, (kvh, hd), dt),
+        "wo": common.dense_init(next(ks), h * hd, (d,), dt).reshape(h, hd, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dt)
+        p["bk"] = jnp.zeros((kvh, hd), dt)
+        p["bv"] = jnp.zeros((kvh, hd), dt)
+    return p
+
+
+def init_mla(key, cfg: ModelConfig):
+    ks = common.keygen(key)
+    d, h = cfg.d_model, cfg.num_heads
+    hd, rd = cfg.head_dim, cfg.rope_head_dim
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    vd = cfg.v_head_dim or hd
+    dt = common.dtype_of(cfg.dtype)
+    return {
+        "w_dq": common.dense_init(next(ks), d, (qr,), dt),
+        "q_norm": jnp.ones((qr,), dt),
+        "w_uq": common.dense_init(next(ks), qr, (h, hd + rd), dt),
+        "w_dkv": common.dense_init(next(ks), d, (kr + rd,), dt),
+        "kv_norm": jnp.ones((kr,), dt),
+        "w_uk": common.dense_init(next(ks), kr, (h, hd), dt),
+        "w_uv": common.dense_init(next(ks), kr, (h, vd), dt),
+        "wo": common.dense_init(next(ks), h * vd, (d,), dt).reshape(h, vd, d),
+    }
+
+
+# ------------------------------------------------- blocked online softmax
+def _blocked_attn(q, kv_block_fn, num_kv_blocks, block_k, q_pos0, scale,
+                  kv_offset):
+    """q: (B, bq, KVH, G, hd).  kv_block_fn(j) → (k_blk, v_blk) with shapes
+    (B, bk, KVH, hd), (B, bk, KVH, vd).  Returns (B, bq, KVH, G, vd)."""
+    b, bq, kvh, g, hd = q.shape
+    qf = q.astype(jnp.float32) * scale
+    q_pos = q_pos0 + jnp.arange(bq) + kv_offset            # (bq,)
+
+    def step(carry, j):
+        k_blk, v_blk = kv_block_fn(j)
+        k_pos = j * block_k + jnp.arange(block_k)          # (bk,)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k_blk.astype(jnp.float32))
+        mask = (k_pos[None, :] <= q_pos[:, None])          # (bq, bk)
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        # carry shapes: (B, KVH, G, bq) / (..., vd)
+        vb = v_blk.astype(jnp.float32)                     # (B, bk, KVH, vd)
+        m, l, acc = carry
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        p = jnp.exp(s - m_new[..., None])                  # (B,KVH,G,bq,bk)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, -1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vb)
+        return (m_new, l, acc), None
+
+    vd = kv_block_fn(0)[1].shape[-1]
+    init = (jnp.full((b, kvh, g, bq), _NEG, jnp.float32),
+            jnp.zeros((b, kvh, g, bq), jnp.float32),
+            jnp.zeros((b, kvh, g, bq, vd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init,
+                                  jnp.arange(num_kv_blocks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]           # (B,KVH,G,bq,vd)
+    return jnp.transpose(out, (0, 3, 1, 2, 4))             # (B,bq,KVH,G,vd)
+
+
+def _run_q_blocks(q, kv_block_fn, cfg, L, vd, kv_offset=0):
+    """Outer loop over query blocks.  q: (B, L, KVH, G, hd)."""
+    b, _, kvh, g, hd = q.shape
+    bq = min(cfg.attn_block_q, L)
+    bk = min(cfg.attn_block_k, L + kv_offset)
+    nq = L // bq
+    nk = (L + kv_offset) // bk
+    scale = (hd if cfg.attention != "mla"
+             else cfg.head_dim + cfg.rope_head_dim) ** -0.5
+    qb = q.reshape(b, nq, bq, kvh, g, hd)
+    # Distribute attention over "model": KV heads when they divide the
+    # axis, else the query-group axis, else the query rows *within* each
+    # block (sequence-parallel attention — the scan axis nq must stay
+    # unsharded, it is temporal).
+    dp = batch_axes()
+    qb = shard_first(qb, [
+        (dp, None, None, "model", None, None),     # shard KV heads
+        (dp, None, None, None, "model", None),     # shard q groups
+        (dp, None, "model", None, None, None),     # shard q rows per block
+    ])
+
+    def per_q_block(args):
+        qi, q_blk = args
+        return _blocked_attn(q_blk, kv_block_fn, nk, bk, qi * bq, scale,
+                             kv_offset)
+
+    out = jax.lax.map(per_q_block, (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    return jnp.moveaxis(out, 0, 1).reshape(b, L, kvh, g, vd)
+
+
+# ----------------------------------------------------------------- GQA
+def gqa_forward(p, x, positions, cfg: ModelConfig):
+    """Full-sequence GQA (train / prefill).  x: (B, L, D) → (B, L, D), and
+    returns (k, v) for cache construction in prefill."""
+    b, L, d = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kvh
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"])
+    k = jnp.einsum("bld,dhk->blhk", x, p["wk"])
+    v = jnp.einsum("bld,dhk->blhk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    # NOTE: no head constraint here — _run_q_blocks owns the attention
+    # layout (heads or q-rows); double constraints caused SPMD involuntary
+    # remat copies between layouts (EXPERIMENTS.md §Perf).
+    qg = q.reshape(b, L, kvh, g, hd)
+
+    def kv_block(j):
+        bk = min(cfg.attn_block_k, L)
+        k_blk = jax.lax.dynamic_slice_in_dim(k, j * bk, bk, 1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, j * bk, bk, 1)
+        return k_blk, v_blk
+
+    out = _run_q_blocks(qg, kv_block, cfg, L, hd)
+    out = out.reshape(b, L, h, hd).astype(x.dtype)
+    return jnp.einsum("blhk,hkd->bld", out, p["wo"]), (k, v)
+
+
+def gqa_decode(p, x, cache, cur_len, cfg: ModelConfig):
+    """One-token decode.  x: (B, 1, D); cache = {k, v}: (B, Lc, KVH, hd),
+    sequence axis sharded on "model" (sequence-parallel flash-decode)."""
+    b, _, d = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kvh
+    pos = jnp.full((b, 1), cur_len, jnp.int32)
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"])
+    k_new = jnp.einsum("bld,dhk->blhk", x, p["wk"])
+    v_new = jnp.einsum("bld,dhk->blhk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k_new, v_new = q + p["bq"], k_new + p["bk"], v_new + p["bv"]
+    q = common.apply_rope(q, pos, cfg.rope_theta)
+    k_new = common.apply_rope(k_new, pos, cfg.rope_theta)
+
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, cur_len, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, cur_len, 1)
+    ck = shard(ck, batch_axes(), "model", None, None)
+    cv = shard(cv, batch_axes(), "model", None, None)
+
+    qg = q.reshape(b, kvh, g, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bhgd,blhd->bhgl", qg, ck.astype(jnp.float32))
+    Lc = ck.shape[1]
+    valid = jnp.arange(Lc)[None, None, None] <= cur_len     # (1,1,1,Lc)
+    s = jnp.where(valid, s, _NEG)
+    att = jax.nn.softmax(s, axis=-1)                        # GSPMD: psum pair
+    out = jnp.einsum("bhgl,blhd->bhgd", att, cv.astype(jnp.float32))
+    out = out.reshape(b, 1, h, hd).astype(x.dtype)
+    return (jnp.einsum("blhk,hkd->bld", out, p["wo"]),
+            {"k": ck, "v": cv})
+
+
+def init_gqa_cache(cfg: ModelConfig, batch, max_len, dtype):
+    z = jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+    return {"k": z, "v": z}
+
+
+# ----------------------------------------------------------------- MLA
+def _mla_qkv(p, x, positions, cfg):
+    b, L, _ = x.shape
+    h, hd, rd = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim
+    q_lat = common.rms_norm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("blr,rhk->blhk", q_lat, p["w_uq"])       # (B,L,H,hd+rd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = common.apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv = x @ p["w_dkv"]                                    # (B,L,kr+rd)
+    c, k_rope = ckv[..., : cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    c = common.rms_norm(c, p["kv_norm"], cfg.norm_eps)
+    k_rope = common.apply_rope(k_rope[..., None, :], positions,
+                               cfg.rope_theta)[..., 0, :]   # shared head
+    return q_nope, q_rope, c, k_rope
+
+
+def mla_forward(p, x, positions, cfg: ModelConfig):
+    """MLA train/prefill: latent-blocked attention (module docstring)."""
+    b, L, d = x.shape
+    h, hd, rd = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim
+    vd = cfg.v_head_dim or hd
+    q_nope, q_rope, c, k_rope = _mla_qkv(p, x, positions, cfg)
+    q_cat = jnp.concatenate([q_nope, q_rope], -1)           # (B,L,H,hd+rd)
+    q_cat = shard(q_cat, batch_axes(), None, "model", None)
+    qg = q_cat[:, :, :, None, :]                            # KVH=H, G=1
+
+    bk = min(cfg.attn_block_k, L)
+
+    def kv_block(j):
+        c_blk = jax.lax.dynamic_slice_in_dim(c, j * bk, bk, 1)
+        kr_blk = jax.lax.dynamic_slice_in_dim(k_rope, j * bk, bk, 1)
+        k_blk = jnp.einsum("blr,rhk->blhk", c_blk, p["w_uk"])
+        k_blk = jnp.concatenate(
+            [k_blk, jnp.broadcast_to(kr_blk[:, :, None, :],
+                                     (*k_blk.shape[:3], rd))], -1)
+        v_blk = jnp.einsum("blr,rhv->blhv", c_blk, p["w_uv"])
+        return k_blk, v_blk
+
+    out = _run_q_blocks(qg, kv_block, cfg, L, vd)
+    out = out.reshape(b, L, h, vd).astype(x.dtype)
+    return (jnp.einsum("blhv,hvd->bld", out, p["wo"]),
+            (c, k_rope))                                    # latent cache
+
+
+def mla_decode(p, x, cache, cur_len, cfg: ModelConfig):
+    """Absorbed-MLA decode: cache {c: (B,Lc,kr), k_rope: (B,Lc,rd)}."""
+    b, _, d = x.shape
+    h, hd, rd = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim
+    vd = cfg.v_head_dim or hd
+    pos = jnp.full((b, 1), cur_len, jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _mla_qkv(p, x, pos, cfg)
+    cc = jax.lax.dynamic_update_slice_in_dim(cache["c"], c_new, cur_len, 1)
+    ckr = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new,
+                                              cur_len, 1)
+    cc = shard(cc, batch_axes(), "model", None)
+    ckr = shard(ckr, batch_axes(), "model", None)
+
+    # Absorb W_uk into the query: q_lat = q_nope · W_uk  → latent space.
+    q_lat = jnp.einsum("blhk,rhk->bhr", q_nope, p["w_uk"])  # (B,H,kr)
+    scale = (hd + rd) ** -0.5
+    s = (jnp.einsum("bhr,blr->bhl", q_lat.astype(jnp.float32),
+                    cc.astype(jnp.float32))
+         + jnp.einsum("bhk,blk->bhl", q_rope[:, 0].astype(jnp.float32),
+                      ckr.astype(jnp.float32))) * scale
+    Lc = cc.shape[1]
+    valid = jnp.arange(Lc)[None, None] <= cur_len
+    s = jnp.where(valid, s, _NEG)
+    att = jax.nn.softmax(s, axis=-1)                        # (B,H,Lc)
+    o_lat = jnp.einsum("bhl,blr->bhr", att, cc.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhv->bhv", o_lat, p["w_uv"].astype(jnp.float32))
+    out = out[:, None].astype(x.dtype)                      # (B,1,H,vd)
+    return (jnp.einsum("blhv,hvd->bld", out, p["wo"]),
+            {"c": cc, "k_rope": ckr})
+
+
+def init_mla_cache(cfg: ModelConfig, batch, max_len, dtype):
+    return {"c": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype)}

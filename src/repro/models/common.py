@@ -1,0 +1,90 @@
+"""Shared neural-net primitives (hand-rolled; no flax in this environment).
+
+Parameters are nested dicts of jnp arrays.  Every ``init_*`` has a matching
+``spec_*``-style sharding entry produced by ``distributed.sharding_rules``;
+initializers are pure functions of a key so ``jax.eval_shape`` gives the
+dry-run parameter skeleton without allocating.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ------------------------------------------------------------------ layers
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            ).astype(x.dtype) * scale
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":                      # nemotron: squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# -------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., L, H, D) rotary over D; positions: (..., L)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., L, D/2)
+    cos = jnp.cos(angles)[..., None, :]                          # (...,L,1,D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- inits
+def dense_init(key, in_dim, out_dims, dtype, scale=None):
+    """Fan-in scaled normal; out_dims may be a tuple for fused projections."""
+    out_dims = (out_dims,) if isinstance(out_dims, int) else tuple(out_dims)
+    scale = scale if scale is not None else in_dim ** -0.5
+    return (jax.random.normal(key, (in_dim, *out_dims), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab, dim, dtype):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32)).astype(dtype)
+
+
+def keygen(key):
+    """Infinite fold-in key generator for sequential init calls."""
+    i = 0
+    while True:
+        yield jax.random.fold_in(key, i)
+        i += 1
+
+
+def cross_entropy_loss(logits, labels, *, z_loss: float = 1e-4,
+                       ignore_id: int = -1):
+    """Token cross-entropy with optional z-loss; logits (..., V) fp32 math.
+
+    Computed via logsumexp so a vocab-sharded logits tensor reduces with one
+    collective (GSPMD) instead of materializing a replicated softmax.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - label_logit
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    mask = (labels != ignore_id)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)

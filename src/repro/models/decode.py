@@ -1,0 +1,103 @@
+"""Single-token decode with static-shape caches (serve_step lowering).
+
+Cache layout mirrors the stack structure: one pytree per stack, each leaf
+stacked over scan groups, so decode is the same ``lax.scan`` as training —
+params and caches are consumed together and the updated caches are emitted.
+
+Cache kinds:  GQA {k, v}: (G, B, Lmax, KVH, hd) seq-sharded on "model";
+MLA latent {c, k_rope}: (G, B, Lmax, kr|rd) — the absorbed-decode memory
+win; mamba {state, conv}: O(1) in context length (long_500k's enabler);
+``mamba_attn`` pairs a mamba cache with the shared block's own KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding_rules import batch_axes, shard
+from repro.models import attention, common, mlp, ssm
+from repro.models.config import ModelConfig
+from repro.models.model import _logits, stacks_of
+
+
+def _block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int):
+    dt = common.dtype_of(cfg.dtype)
+    if kind == "mamba":
+        return ssm.init_mamba_cache(cfg, batch)
+    if kind == "mamba_attn":
+        return (ssm.init_mamba_cache(cfg, batch),
+                attention.init_gqa_cache(cfg, batch, max_len, dt))
+    if cfg.attention == "mla":
+        return attention.init_mla_cache(cfg, batch, max_len, dt)
+    return attention.init_gqa_cache(cfg, batch, max_len, dt)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    caches = []
+    for pattern, groups in stacks_of(cfg):
+        stack = {}
+        for i, kind in enumerate(pattern):
+            one = _block_cache(kind, cfg, batch, max_len)
+            stack[f"block{i}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (groups, *x.shape)), one)
+        caches.append(stack)
+    return caches
+
+
+def _decode_one(kind, p, cache, h, cur_len, cfg, shared):
+    if kind in ("mamba", "mamba_attn"):
+        mc = cache[0] if kind == "mamba_attn" else cache
+        out, mc = ssm.mamba_decode(
+            p["mamba"], common.rms_norm(h, p["norm1"], cfg.norm_eps), mc, cfg)
+        h = h + out
+        if kind == "mamba_attn":
+            sp = shared
+            a_out, ac = attention.gqa_decode(
+                sp["attn"], common.rms_norm(h, sp["norm1"], cfg.norm_eps),
+                cache[1], cur_len, cfg)
+            h = h + a_out
+            h = h + mlp.mlp_forward(
+                sp["mlp"], common.rms_norm(h, sp["norm2"], cfg.norm_eps), cfg)
+            return h, (mc, ac)
+        return h, mc
+    dec = (attention.mla_decode if cfg.attention == "mla"
+           else attention.gqa_decode)
+    a_out, cache = dec(p["attn"],
+                       common.rms_norm(h, p["norm1"], cfg.norm_eps),
+                       cache, cur_len, cfg)
+    h = h + a_out
+    x2 = common.rms_norm(h, p["norm2"], cfg.norm_eps)
+    if kind == "moe":
+        m_out, _ = mlp.moe_forward(p["moe"], x2, cfg)
+    else:
+        m_out = mlp.mlp_forward(p["mlp"], x2, cfg)
+    return h + m_out, cache
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens, cur_len):
+    """One decode step.  tokens: (B, 1) (audio: (B, K, 1)); cur_len: the
+    write position (new token attends positions ≤ cur_len).  Returns
+    (logits (B, 1, V[, K]), new caches)."""
+    if cfg.num_codebooks:
+        h = sum(params["embedding"][k][tokens[:, k]]
+                for k in range(cfg.num_codebooks))
+    else:
+        h = params["embedding"][tokens]
+    h = shard(h, batch_axes(), None, None)
+    shared = params.get("shared_attn")
+    new_caches = []
+    for (pattern, groups), stack_p, cache in zip(
+            stacks_of(cfg), params["stacks"], caches):
+
+        def group_fn(h, inp, pattern=pattern):
+            gp, gc = inp
+            nc = {}
+            for i, kind in enumerate(pattern):
+                h, c = _decode_one(kind, gp[f"block{i}"], gc[f"block{i}"],
+                                   h, cur_len, cfg, shared)
+                nc[f"block{i}"] = c
+            return h, nc
+
+        h, new_cache = jax.lax.scan(group_fn, h, (stack_p, cache))
+        new_caches.append(new_cache)
+    return _logits(params, cfg, h), new_caches

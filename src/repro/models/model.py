@@ -1,0 +1,228 @@
+"""Composable decoder-only LM covering all 10 assigned architectures.
+
+A config maps to a list of *stacks*; each stack is a repeating *pattern* of
+block kinds scanned over its groups (``lax.scan`` + optional remat), so HLO
+size is independent of depth:
+
+    dense LMs       [( ["dense"], num_layers )]
+    deepseek-v3     [( ["dense"], 3 ), ( ["moe"], 58 )]
+    llama4          [( ["dense", "moe"], 24 )]          # interleaved
+    mamba2          [( ["mamba"], 48 )]
+    zamba2          [( ["mamba"]*5 + ["mamba_attn"], 9 )]  # shared attn blk
+
+``mamba_attn`` applies the *shared* transformer block (zamba2's weight-tied
+attention+MLP) after its mamba mixer; its params live once at the top level
+and each invocation keeps its own KV cache.
+
+Modality stubs (assignment): VLM prepends pre-computed patch embeddings via
+a learned projection; audio sums EnCodec-codebook embeddings and emits one
+head per codebook.  Frontends themselves are out of scope.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding_rules import batch_axes, shard
+from repro.models import attention, common, mlp, ssm
+from repro.models.config import ModelConfig
+
+PATCH_EMBED_DIM = 1024          # CLIP-style stub feature width
+
+
+# ------------------------------------------------------------------ pattern
+def stacks_of(cfg: ModelConfig) -> list[tuple[list[str], int]]:
+    if cfg.family == "ssm":
+        return [(["mamba"], cfg.num_layers)]
+    if cfg.family == "hybrid":
+        e = cfg.hybrid_attn_every
+        return [(["mamba"] * (e - 1) + ["mamba_attn"], cfg.num_layers // e)]
+    if cfg.family == "moe":
+        out = []
+        if cfg.first_dense_layers:
+            out.append((["dense"], cfg.first_dense_layers))
+        rest = cfg.num_layers - cfg.first_dense_layers
+        if cfg.moe_every > 1:
+            pat = ["dense"] * (cfg.moe_every - 1) + ["moe"]
+            out.append((pat, rest // cfg.moe_every))
+        else:
+            out.append((["moe"], rest))
+        return out
+    return [(["dense"], cfg.num_layers)]
+
+
+# --------------------------------------------------------------------- init
+def _init_block(key, kind: str, cfg: ModelConfig):
+    ks = common.keygen(key)
+    dt = common.dtype_of(cfg.dtype)
+    d = cfg.d_model
+    if kind in ("mamba", "mamba_attn"):
+        return {"norm1": jnp.ones((d,), dt),
+                "mamba": ssm.init_mamba(next(ks), cfg)}
+    attn_init = (attention.init_mla if cfg.attention == "mla"
+                 else attention.init_gqa)
+    p = {"norm1": jnp.ones((d,), dt), "attn": attn_init(next(ks), cfg),
+         "norm2": jnp.ones((d,), dt)}
+    if kind == "moe":
+        p["moe"] = mlp.init_moe(next(ks), cfg)
+    else:
+        p["mlp"] = mlp.init_mlp(next(ks), cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = common.keygen(key)
+    dt = common.dtype_of(cfg.dtype)
+    d, v = cfg.d_model, cfg.vocab_size
+    params: dict[str, Any] = {}
+    if cfg.num_codebooks:
+        params["embedding"] = jnp.stack([
+            common.embed_init(next(ks), v, d, dt)
+            for _ in range(cfg.num_codebooks)])
+        params["unembed"] = common.dense_init(next(ks), d,
+                                              (cfg.num_codebooks * v,), dt)
+    else:
+        params["embedding"] = common.embed_init(next(ks), v, d, dt)
+        params["unembed"] = common.dense_init(next(ks), d, (v,), dt)
+    if cfg.num_patches:
+        params["patch_proj"] = common.dense_init(next(ks), PATCH_EMBED_DIM,
+                                                 (d,), dt)
+    if cfg.family == "hybrid":
+        k = next(ks)
+        params["shared_attn"] = {
+            "norm1": jnp.ones((d,), dt),
+            "attn": attention.init_gqa(jax.random.fold_in(k, 0), cfg),
+            "norm2": jnp.ones((d,), dt),
+            "mlp": mlp.init_mlp(jax.random.fold_in(k, 1), cfg),
+        }
+    stacks = []
+    for pattern, groups in stacks_of(cfg):
+        gkeys = jax.random.split(next(ks), groups)
+        blocks = {}
+        for i, kind in enumerate(pattern):
+            blocks[f"block{i}"] = jax.vmap(
+                lambda kk, kind=kind: _init_block(
+                    jax.random.fold_in(kk, i), kind, cfg))(gkeys)
+        stacks.append(blocks)
+    params["stacks"] = stacks
+    params["final_norm"] = jnp.ones((d,), dt)
+    return params
+
+
+def param_shapes(cfg: ModelConfig):
+    """Dry-run parameter skeleton (no allocation)."""
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+# ------------------------------------------------------------------- embed
+def embed_inputs(params, cfg: ModelConfig, batch: dict):
+    """batch → (h (B, L, D), positions (B, L))."""
+    tokens = batch["tokens"]
+    if cfg.num_codebooks:                      # audio: (B, K, L)
+        h = sum(params["embedding"][k][tokens[:, k]]
+                for k in range(cfg.num_codebooks))
+        b, L = tokens.shape[0], tokens.shape[2]
+    else:
+        h = params["embedding"][tokens]        # (B, L, D)
+        b, L = tokens.shape
+    if cfg.num_patches and "patch_embeds" in batch:
+        patches = batch["patch_embeds"] @ params["patch_proj"]
+        h = jnp.concatenate([patches.astype(h.dtype), h], axis=1)
+        L = L + cfg.num_patches
+    positions = jnp.broadcast_to(jnp.arange(L), (b, L))
+    return shard(h, batch_axes(), None, None), positions
+
+
+def _logits(params, cfg, h):
+    h = common.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["unembed"]
+    logits = shard(logits, batch_axes(), None, "model")
+    if cfg.num_codebooks:
+        b, L, _ = logits.shape
+        logits = logits.reshape(b, L, cfg.num_codebooks, cfg.vocab_size)
+    return logits
+
+
+# ------------------------------------------------------------------ blocks
+def _apply_block(kind, p, h, positions, cfg, shared):
+    """Returns (h, aux_loss, cache_out) — cache_out only meaningful in
+    prefill (k/v or ssm state) and is None in plain training."""
+    aux = jnp.float32(0)
+    cache = None
+    if kind in ("mamba", "mamba_attn"):
+        out, cache = ssm.mamba_forward(p["mamba"],
+                                       common.rms_norm(h, p["norm1"],
+                                                       cfg.norm_eps), cfg)
+        h = h + out
+        if kind == "mamba_attn":
+            sp = shared
+            a_out, kv = attention.gqa_forward(
+                sp["attn"], common.rms_norm(h, sp["norm1"], cfg.norm_eps),
+                positions, cfg)
+            h = h + a_out
+            h = h + mlp.mlp_forward(
+                sp["mlp"], common.rms_norm(h, sp["norm2"], cfg.norm_eps), cfg)
+            cache = (cache, kv)
+        return h, aux, cache
+    attn_fwd = (attention.mla_forward if cfg.attention == "mla"
+                else attention.gqa_forward)
+    a_out, kv = attn_fwd(p["attn"],
+                         common.rms_norm(h, p["norm1"], cfg.norm_eps),
+                         positions, cfg)
+    h = h + a_out
+    x2 = common.rms_norm(h, p["norm2"], cfg.norm_eps)
+    if kind == "moe":
+        m_out, aux = mlp.moe_forward(p["moe"], x2, cfg)
+    else:
+        m_out = mlp.mlp_forward(p["mlp"], x2, cfg)
+    return h + m_out, aux, kv
+
+
+# ----------------------------------------------------------------- forward
+def forward(params, cfg: ModelConfig, batch: dict, *, collect_cache=False):
+    """Training/prefill forward.  Returns (logits, aux_loss, caches)."""
+    h, positions = embed_inputs(params, cfg, batch)
+    shared = params.get("shared_attn")
+    caches = []
+    total_aux = jnp.float32(0)
+    for (pattern, groups), stack_p in zip(stacks_of(cfg), params["stacks"]):
+
+        def group_fn(h, gp, pattern=pattern):
+            if cfg.fsdp_per_layer_gather:
+                from repro.distributed.sharding_rules import constrain_params
+                gp = constrain_params(gp)
+            aux = jnp.float32(0)
+            cache_out = {}
+            for i, kind in enumerate(pattern):
+                h = shard(h, batch_axes(), "model", None)   # SP boundary
+                h, a, c = _apply_block(kind, gp[f"block{i}"], h, positions,
+                                       cfg, shared)
+                aux += a
+                if collect_cache:
+                    cache_out[f"block{i}"] = c
+            return h, (aux, cache_out)
+
+        body = (jax.checkpoint(group_fn,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+                if cfg.remat else group_fn)
+        h, (auxs, cache) = jax.lax.scan(body, h, stack_p)
+        caches.append(cache)
+        total_aux = total_aux + jnp.sum(auxs)
+    logits = _logits(params, cfg, h)
+    return logits, total_aux, (caches if collect_cache else None)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, aux_coef: float = 0.01):
+    logits, aux, _ = forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.num_codebooks:                       # (B, K, L) → (B, L, K)
+        labels = jnp.swapaxes(labels, 1, 2)
+    if cfg.num_patches and "patch_embeds" in batch:
+        pad = jnp.full((*labels.shape[:-1], cfg.num_patches), -1,
+                       labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=-1)
+    loss = common.cross_entropy_loss(logits, labels)
+    return loss + aux_coef * aux, {"ce": loss, "aux": aux}

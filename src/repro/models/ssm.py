@@ -1,0 +1,149 @@
+"""Mamba2 / SSD (state-space duality) sequence mixer.
+
+Chunked SSD algorithm (Dao & Gu 2024): the sequence splits into chunks of
+``cfg.ssm_chunk``; within a chunk the recurrence is evaluated as a masked
+attention-like matmul (MXU-friendly), across chunks a short ``lax.scan``
+carries the (H, S, P) state.  Decode is the O(1) recurrence on a cached
+state — this is why the SSM/hybrid archs own the ``long_500k`` cell: the
+"KV cache" is a fixed (H, S, P) state + a (w-1)-step conv tail, independent
+of context length.
+
+Layout: d_inner = expand·d_model, heads H = d_inner/64, head dim P = 64,
+single B/C group (n_groups=1), scalar decay per head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding_rules import batch_axes, shard
+from repro.models import common
+from repro.models.config import ModelConfig
+
+
+def init_mamba(key, cfg: ModelConfig):
+    ks = common.keygen(key)
+    d, di, s, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    dt = common.dtype_of(cfg.dtype)
+    conv_ch = di + 2 * s
+    return {
+        "in_proj": common.dense_init(next(ks), d,
+                                     (2 * di + 2 * s + h,), dt),
+        "conv": (jax.random.normal(next(ks), (cfg.conv_width, conv_ch),
+                                   jnp.float32) * 0.1).astype(dt),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((di,), dt),
+        "out_proj": common.dense_init(next(ks), di, (d,), dt),
+    }
+
+
+def _split(zxbcdt, cfg):
+    di, s, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + di + 2 * s]
+    dt = zxbcdt[..., di + di + 2 * s:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv, cfg, tail=None):
+    """Depthwise causal conv width w over channels.  tail: (B, w-1, C) from
+    a previous segment (decode/prefill continuation)."""
+    w = cfg.conv_width
+    if tail is None:
+        tail = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[-1]), xbc.dtype)
+    padded = jnp.concatenate([tail, xbc], 1)               # (B, L+w-1, C)
+    out = sum(padded[:, i: i + xbc.shape[1]] * conv[i] for i in range(w))
+    return jax.nn.silu(out), padded[:, -(w - 1):]
+
+
+def mamba_forward(p, x, cfg: ModelConfig, conv_tail=None, init_state=None):
+    """x: (B, L, D) → (B, L, D), (final ssm state, conv tail) for caching."""
+    b, L, d = x.shape
+    di, S, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = di // H
+    cs = min(cfg.ssm_chunk, L)
+    nc = L // cs
+    assert L % cs == 0, "pad sequence to chunk multiple"
+
+    z, xbc, dt = _split(x @ p["in_proj"], cfg)
+    xbc, tail = _causal_conv(xbc, p["conv"], cfg, conv_tail)
+    xs, Bc, Cc = jnp.split(xbc, [di, di + S], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,L,H)
+    A = -jnp.exp(p["a_log"])                                      # (H,)
+
+    xh = xs.reshape(b, nc, cs, H, P).astype(jnp.float32)
+    xh = shard(xh, batch_axes(), None, None, "model", None)
+    Bcc = Bc.reshape(b, nc, cs, S).astype(jnp.float32)
+    Ccc = Cc.reshape(b, nc, cs, S).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, cs, H)
+    dA = dtc * A                                                  # (B,nc,cs,H)
+    cum = jnp.cumsum(dA, axis=2)                                  # (B,nc,cs,H)
+
+    # ---- intra-chunk (masked attention-like) ----
+    cb = jnp.einsum("bnis,bnjs->bnij", Ccc, Bcc)                  # (B,nc,cs,cs)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,i,j,H)
+    mask = jnp.tril(jnp.ones((cs, cs), bool))
+    scores = jnp.where(mask[None, None, :, :, None],
+                       cb[..., None] * decay * dtc[:, :, None], 0.0)
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", scores, xh)
+
+    # ---- chunk states + inter-chunk recurrence ----
+    w_j = jnp.exp(cum[:, :, -1:, :] - cum) * dtc                  # (B,nc,cs,H)
+    state_c = jnp.einsum("bnjs,bnjh,bnjhp->bnhsp", Bcc, w_j, xh)  # (B,nc,H,S,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # (B,nc,H)
+
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((b, H, S, P), jnp.float32))
+
+    def scan_fn(s_prev, inp):
+        dec, sc = inp                                            # (B,H),(B,H,S,P)
+        s_new = s_prev * dec[..., None, None] + sc
+        return s_new, s_prev                                     # emit BEFORE
+
+    s_final, s_before = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(state_c, 1, 0)))
+    s_before = jnp.moveaxis(s_before, 0, 1)                      # (B,nc,H,S,P)
+
+    y_inter = jnp.einsum("bnis,bnhsp,bnih->bnihp", Ccc, s_before,
+                         jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, L, H, P)
+    y = y + p["d_skip"][None, None, :, None] * xs.reshape(b, L, H, P
+                                                          ).astype(jnp.float32)
+    y = y.reshape(b, L, di)
+    y = common.rms_norm((y * jax.nn.silu(z.astype(jnp.float32))
+                         ).astype(x.dtype), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], (s_final, tail)
+
+
+def mamba_decode(p, x, cache, cfg: ModelConfig):
+    """One-token decode.  x: (B, 1, D); cache {state (B,H,S,P) fp32,
+    conv (B, w-1, di+2S)} → (out (B,1,D), new cache)."""
+    b = x.shape[0]
+    di, S, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = di // H
+    z, xbc, dt = _split(x @ p["in_proj"], cfg)
+    xbc, tail = _causal_conv(xbc, p["conv"], cfg, cache["conv"])
+    xs, Bc, Cc = jnp.split(xbc[:, 0], [di, di + S], axis=-1)      # (B, ·)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["a_log"])
+    dA = jnp.exp(dt * A)                                          # (B,H)
+    xh = xs.reshape(b, H, P).astype(jnp.float32)
+    upd = jnp.einsum("bs,bh,bhp->bhsp", Bc.astype(jnp.float32), dt, xh)
+    state = cache["state"] * dA[..., None, None] + upd
+    y = jnp.einsum("bs,bhsp->bhp", Cc.astype(jnp.float32), state)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, di)
+    y = common.rms_norm((y * jax.nn.silu(z.astype(jnp.float32))
+                         ).astype(x.dtype), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"state": state, "conv": tail}
+
+
+def init_mamba_cache(cfg: ModelConfig, batch):
+    di, S, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = di // H
+    return {"state": jnp.zeros((batch, H, S, P), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * S),
+                              common.dtype_of(cfg.dtype))}

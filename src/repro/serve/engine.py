@@ -1,0 +1,95 @@
+"""Batched serving: prefill once, decode many, static-shape caches.
+
+``caches_from_prefill`` converts the per-stack cache pytrees that
+``model.forward(collect_cache=True)`` emits (tuples, prompt-length) into the
+decode layout (dicts, padded to ``max_len``) — one prefill pass replaces
+prompt_len decode steps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode as dec
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.models.model import stacks_of
+
+
+def _pad_seq(x, max_len, axis):
+    pad = max_len - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def caches_from_prefill(cfg: ModelConfig, prefill_caches, max_len: int):
+    """Prefill cache (tuples, length L) → decode cache (dicts, max_len)."""
+    out = []
+    for (pattern, groups), stack_cache in zip(stacks_of(cfg), prefill_caches):
+        stack = {}
+        for i, kind in enumerate(pattern):
+            c = stack_cache[f"block{i}"]
+            if kind == "mamba":
+                state, tail = c
+                stack[f"block{i}"] = {"state": state, "conv": tail}
+            elif kind == "mamba_attn":
+                (state, tail), (k, v) = c
+                stack[f"block{i}"] = (
+                    {"state": state, "conv": tail},
+                    {"k": _pad_seq(k, max_len, 2),
+                     "v": _pad_seq(v, max_len, 2)})
+            elif cfg.attention == "mla":
+                c_lat, k_rope = c
+                stack[f"block{i}"] = {"c": _pad_seq(c_lat, max_len, 2),
+                                      "k_rope": _pad_seq(k_rope, max_len, 2)}
+            else:
+                k, v = c
+                stack[f"block{i}"] = {"k": _pad_seq(k, max_len, 2),
+                                      "v": _pad_seq(v, max_len, 2)}
+        out.append(stack)
+    return out
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, max_len: int):
+    """Returns (last-position logits, decode-ready caches, prompt_len)."""
+    logits, _, caches = model.forward(params, cfg, batch, collect_cache=True)
+    prompt_len = logits.shape[1]
+    return logits[:, -1:], caches_from_prefill(cfg, caches, max_len), \
+        prompt_len
+
+
+def generate(params, cfg: ModelConfig, prompt: jnp.ndarray, num_new: int,
+             *, key=None, temperature: float = 0.0, max_len: int = 0):
+    """Greedy / temperature sampling for a batch of equal-length prompts.
+
+    prompt: (B, Lp) (audio: (B, K, Lp)).  Returns (B, num_new) tokens
+    (audio: (B, K, num_new))."""
+    Lp = prompt.shape[-1]
+    max_len = max_len or Lp + num_new
+    batch = {"tokens": prompt, "labels": prompt}
+    last_logits, caches, _ = prefill(params, cfg, batch, max_len)
+
+    step_fn = jax.jit(lambda p, c, t, n: dec.decode_step(p, cfg, c, t, n))
+    outs = []
+    logits = last_logits
+
+    def sample(lg, k):
+        if temperature <= 0:
+            return jnp.argmax(lg, -1)
+        return jax.random.categorical(k, lg / temperature, axis=-1)
+
+    key = key if key is not None else jax.random.key(0)
+    for i in range(num_new):
+        key, sk = jax.random.split(key)
+        if cfg.num_codebooks:
+            tok = sample(logits[:, -1], sk)          # (B, K)
+            tok = jnp.swapaxes(tok[:, None], 1, 2)   # (B, K, 1)
+        else:
+            tok = sample(logits[:, -1], sk)[:, None]  # (B, 1)
+        outs.append(tok)
+        logits, caches = step_fn(params, caches, tok, jnp.int32(Lp + i))
+    return jnp.concatenate(outs, -1 if cfg.num_codebooks else 1)

@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 real device;
+only launch/dryrun.py forces 512 placeholder devices (and only in its own
+process)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.graph import generators
+    return generators.powerlaw_cluster(300, 6.0, prob=0.3, seed=7)
+
+
+@pytest.fixture(scope="session")
+def tiny_graph():
+    """Deterministic 8-vertex graph mirroring the paper's Fig. 3 scale."""
+    from repro.graph import csr
+    src = np.array([0, 1, 1, 2, 3, 3, 4, 4, 5, 6, 7, 2])
+    dst = np.array([1, 0, 2, 3, 2, 4, 6, 7, 4, 7, 8, 5])
+    prob = np.full(len(src), 0.7, np.float32)
+    return csr.from_edges(src, dst, prob, 9)

@@ -1,0 +1,67 @@
+"""Unit + property tests for the packed color-bitmask layer."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitmask
+
+
+def test_num_words():
+    assert bitmask.num_words(1) == 1
+    assert bitmask.num_words(32) == 1
+    assert bitmask.num_words(33) == 2
+    assert bitmask.num_words(1024) == 32
+
+
+def test_tail_mask():
+    m = bitmask.color_tail_mask(40)
+    assert m.shape == (2,)
+    assert m[0] == 0xFFFFFFFF and m[1] == 0xFF
+
+
+@given(st.lists(st.integers(0, 31), min_size=1, max_size=64))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_roundtrip(colors):
+    mask = bitmask.make_mask(4, 32)
+    rows = jnp.zeros(len(colors), jnp.int32)
+    mask = bitmask.set_color(mask, rows, jnp.asarray(colors, jnp.int32))
+    bits = bitmask.unpack_bits(mask)
+    assert bool((bitmask.pack_bits(bits) == mask).all())
+    expected = np.zeros(32, bool)
+    expected[list(set(colors))] = True
+    np.testing.assert_array_equal(np.asarray(bits)[0, 0], expected)
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=50, deadline=None)
+def test_popcount_matches_python(word):
+    got = int(bitmask.popcount(jnp.asarray([word], jnp.uint32))[0])
+    assert got == bin(word).count("1")
+
+
+def test_set_color_duplicates_or():
+    """Duplicate (row, color) and same-row different colors both OR in."""
+    mask = bitmask.make_mask(3, 64)
+    rows = jnp.asarray([1, 1, 1, 2], jnp.int32)
+    cols = jnp.asarray([0, 0, 33, 5], jnp.int32)
+    mask = bitmask.set_color(mask, rows, cols)
+    m = np.asarray(mask)
+    assert m[1, 0] == 1 and m[1, 1] == (1 << 1)
+    assert m[2, 0] == (1 << 5)
+    assert m[0].sum() == 0
+
+
+def test_count_colors():
+    mask = jnp.asarray([[0x3, 0x0], [0xFFFFFFFF, 0x1]], jnp.uint32)
+    np.testing.assert_array_equal(np.asarray(bitmask.count_colors(mask)), [2, 33])
+
+
+def test_scatter_or_words_duplicate_indices():
+    dst = jnp.zeros((4, 2), jnp.uint32)
+    rows = jnp.asarray([2, 2, 0], jnp.int32)
+    words = jnp.asarray([1, 1, 0], jnp.int32)
+    vals = jnp.asarray([0b01, 0b10, 0xF], jnp.uint32)
+    out = np.asarray(bitmask.scatter_or_words(dst, rows, words, vals))
+    assert out[2, 1] == 0b11
+    assert out[0, 0] == 0xF

@@ -1,0 +1,25 @@
+"""Drives tests/distributed_check.py in a subprocess with 8 forced host
+devices.  Keeping the fork outside pytest's process preserves the 1-device
+invariant for all other tests (see conftest.py note)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = pathlib.Path(__file__).parent / "distributed_check.py"
+_SRC = str(pathlib.Path(__file__).parents[1] / "src")
+
+
+@pytest.mark.slow
+def test_distributed_equivalence():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, str(_SCRIPT)],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    for marker in ("OK sample_parallel", "OK distributed_greedy",
+                   "OK graph_parallel", "OK graph_parallel_multipod"):
+        assert marker in proc.stdout, proc.stdout

@@ -1,0 +1,57 @@
+"""Statistical and determinism tests for the counter-based RNG."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rng
+
+
+def test_determinism():
+    a = rng.hash_u32(1, 2, jnp.arange(100, dtype=jnp.uint32), 3)
+    b = rng.hash_u32(1, 2, jnp.arange(100, dtype=jnp.uint32), 3)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(0, 2**31), st.integers(0, 63))
+@settings(max_examples=20, deadline=None)
+def test_counter_sensitivity(seed, level):
+    """Changing any counter changes (almost surely) the output."""
+    e = jnp.arange(64, dtype=jnp.uint32)
+    base = np.asarray(rng.hash_u32(seed, level, e, 0))
+    assert not (base == np.asarray(rng.hash_u32(seed + 1, level, e, 0))).all()
+    assert not (base == np.asarray(rng.hash_u32(seed, level + 1, e, 0))).all()
+    assert not (base == np.asarray(rng.hash_u32(seed, level, e, 1))).all()
+
+
+def test_uniform_range_and_mean():
+    bits = rng.hash_u32(7, 0, jnp.arange(200_000, dtype=jnp.uint32), 0)
+    u = np.asarray(rng.uniform_from_u32(bits))
+    assert (u >= 0).all() and (u < 1).all()
+    assert abs(u.mean() - 0.5) < 5e-3
+    assert abs(u.var() - 1 / 12) < 5e-3
+
+
+def test_bernoulli_word_rate():
+    """Each packed lane is Bernoulli(p) to within Monte-Carlo error."""
+    e = jnp.arange(20_000, dtype=jnp.uint32)
+    for p in (0.1, 0.5, 0.9):
+        w = np.asarray(rng.bernoulli_word(3, 0, e, jnp.uint32(0),
+                                          jnp.full((20_000,), p, jnp.float32)))
+        rate = np.unpackbits(w.view(np.uint8)).mean()
+        assert abs(rate - p) < 0.01, (p, rate)
+
+
+def test_bernoulli_lane_independence():
+    """Adjacent color lanes must be uncorrelated (each its own hash stream)."""
+    e = jnp.arange(50_000, dtype=jnp.uint32)
+    w = np.asarray(rng.bernoulli_word(3, 1, e, jnp.uint32(0),
+                                      jnp.full((50_000,), 0.5, jnp.float32)))
+    l0 = (w & 1).astype(np.float64)
+    l1 = ((w >> 1) & 1).astype(np.float64)
+    corr = np.corrcoef(l0, l1)[0, 1]
+    assert abs(corr) < 0.02
+
+
+def test_pack_bool_word():
+    bits = jnp.asarray([[True, False, True]])
+    assert int(rng.pack_bool_word(bits)[0]) == 0b101
