@@ -1,0 +1,71 @@
+"""Online serving: query throughput/latency vs sketch-pool size.
+
+For each pool size the bench times (a) a cold mixed micro-batched flush
+(top-k + σ(S) + marginal — includes jit compile on the first size), (b) a
+warm flush of fresh σ(S)/marginal queries reusing the compiled programs,
+and (c) a fully cached re-flush, reporting per-query latency and
+queries/sec.  Shows the amortization story: pool sampling is paid once,
+per-query cost stays flat as the pool (and estimate quality) grows.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.graph import generators
+from repro.serve.influence import (MicroBatcher, PoolConfig, QueryEngine,
+                                   ResultCache, SketchStore)
+
+
+def _mixed_load(batcher, rng, n, k, num_queries):
+    batcher.submit_top_k(k)
+    for _ in range(num_queries):
+        batcher.submit_sigma(rng.integers(0, n, rng.integers(1, 5)).tolist())
+        batcher.submit_marginal(rng.integers(0, n, 2).tolist())
+    return 1 + 2 * num_queries
+
+
+def run(n=1500, deg=8.0, colors=64, pool_sizes=(2, 4, 8, 16), k=4,
+        num_queries=12, out=print):
+    out("# serve: pool_batches,theta,sample_s,cold_flush_s,warm_flush_s,"
+        "warm_q_per_s,cached_flush_s,dispatches")
+    g = generators.powerlaw_cluster(n, deg, prob=(0.0, 0.25), seed=11)
+    store = SketchStore(g, PoolConfig(num_colors=colors,
+                                      max_batches=max(pool_sizes)))
+    engine = QueryEngine(store)
+    rows = []
+    for size in pool_sizes:
+        t0 = time.perf_counter()
+        store.ensure(size)
+        sample_s = time.perf_counter() - t0
+
+        batcher = MicroBatcher(engine, cache=ResultCache())
+        rng = np.random.default_rng(size)
+        nq = _mixed_load(batcher, rng, n, k, num_queries)
+        t0 = time.perf_counter()
+        batcher.flush()
+        cold_s = time.perf_counter() - t0
+
+        rng2 = np.random.default_rng(size + 1000)
+        nq = _mixed_load(batcher, rng2, n, k, num_queries)
+        t0 = time.perf_counter()
+        batcher.flush()
+        warm_s = time.perf_counter() - t0
+
+        _mixed_load(batcher, np.random.default_rng(size + 1000), n, k,
+                    num_queries)
+        t0 = time.perf_counter()
+        batcher.flush()
+        cached_s = time.perf_counter() - t0
+
+        row = (size, store.num_samples, round(sample_s, 3), round(cold_s, 3),
+               round(warm_s, 3), round(nq / max(warm_s, 1e-9), 1),
+               round(cached_s, 5), batcher.dispatches)
+        rows.append(row)
+        out(",".join(str(x) for x in row))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

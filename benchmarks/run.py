@@ -15,7 +15,7 @@ def main() -> None:
     from benchmarks import (bench_work_savings, bench_reorder,
                             bench_fused_vs_unfused, bench_frontier_profile,
                             bench_kernels, bench_imm, bench_scaling,
-                            roofline)
+                            bench_serve_influence, roofline)
 
     sections = [
         ("Fig4 work savings / occupancy", lambda: bench_work_savings.run(
@@ -28,6 +28,8 @@ def main() -> None:
             n=2000, colors=(1, 32), probs=(0.2,))),
         ("kernel micros", bench_kernels.run),
         ("IMM end-to-end", lambda: bench_imm.run(theta_cap=2048)),
+        ("Online serving: throughput vs pool size",
+         lambda: bench_serve_influence.run(n=1000, pool_sizes=(2, 4, 8))),
         ("Fig10/11 device scaling", lambda: bench_scaling.run(
             device_counts=(1, 2, 4, 8))),
         ("Roofline table (from dry-run records)", roofline.table),

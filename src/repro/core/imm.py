@@ -7,10 +7,24 @@ the martingale bound on θ guarantees (1 − 1/e − ε) approximation.
 Seed selection is matmul-shaped on TPU: the uncovered-color marginal gains
 are popcount reductions over the columnar bitmask (the coverage kernel), not
 atomic list walks — no GPU-style RRR linked lists anywhere.
+
+The greedy inner loop is a single jit-compiled ``lax.fori_loop`` program
+(``greedy_extend``): argmax selection and active-mask update stay on device,
+with no per-iteration host round-trip.  The same program serves offline
+``run_imm`` and the online query engine (`repro.serve.influence`), which
+resumes it from arbitrary active masks for marginal-gain-with-exclusion
+queries.
+
+Sampling is pluggable through the *sketch pool* protocol: any object with
+``num_colors``, ``master_seed`` and ``ensure(num_batches) -> list[RRRBatch]``
+(e.g. ``serve.influence.sketch_store.SketchStore``) can back
+``estimate_theta`` / ``run_imm``, making offline IMM just one client of a
+long-lived sampled-sketch asset.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 import jax
@@ -43,11 +57,18 @@ def theta_bound(n: int, k: int, eps: float, ell: float = 1.0) -> int:
 
 def estimate_theta(g: csr.Graph, k: int, eps: float, ell: float = 1.0,
                    num_colors: int = 64, master_seed: int = 0,
-                   max_batches_per_phase: int = 64) -> tuple[int, list]:
+                   max_batches_per_phase: int = 64,
+                   g_rev: csr.Graph | None = None,
+                   pool=None) -> tuple[int, list]:
     """IMM sampling phase: iterative-halving lower bound on OPT → θ.
 
     Returns (θ, batches generated so far) — generated batches are *reused*
     by the selection phase (IMM's trick to avoid resampling).
+
+    ``g_rev``: prebuilt transpose(g); computed here only when absent so one
+    reversal serves both the halving phase and the selection top-up.
+    ``pool``: optional sketch pool (see module docstring); when given, the
+    pool owns sampling and this function never transposes the graph itself.
     """
     n = g.num_vertices
     ell = ell * (1 + math.log(2) / math.log(n))
@@ -56,19 +77,27 @@ def estimate_theta(g: csr.Graph, k: int, eps: float, ell: float = 1.0,
                  * (_log_comb(n, k) + ell * math.log(n)
                     + math.log(math.log2(max(n, 4))))
                  * n / eps_prime ** 2)
-    g_rev = csr.transpose(g)
+    if pool is None and g_rev is None:
+        g_rev = csr.transpose(g)
     batches: list[rrr.RRRBatch] = []
+
+    def grow(want: int) -> list[rrr.RRRBatch]:
+        if pool is not None:
+            return _pool_take(pool, want)
+        while len(batches) < want:
+            batches.append(rrr.sample_batch(g_rev, num_colors, master_seed,
+                                            len(batches)))
+        return batches
+
     lb = 1.0
     for i in range(1, max(int(math.log2(n)), 1)):
         x = n / (2 ** i)
         theta_i = int(math.ceil(lam_prime / x))
         want = min(-(-theta_i // num_colors), max_batches_per_phase)
-        while len(batches) < want:
-            batches.append(rrr.sample_batch(g_rev, num_colors, master_seed,
-                                            len(batches)))
-        theta_cur = len(batches) * num_colors
-        seeds, cov = greedy_max_cover(rrr.stack_visited(batches), k,
-                                      num_colors)
+        cur = grow(want)
+        vis = (pool.visited_stack()[:len(cur)] if pool is not None
+               else rrr.stack_visited(cur))
+        seeds, cov = greedy_max_cover(vis, k, num_colors)
         if n * cov >= (1 + eps_prime) * x:
             lb = n * cov / (1 + eps_prime)
             break
@@ -76,41 +105,115 @@ def estimate_theta(g: csr.Graph, k: int, eps: float, ell: float = 1.0,
     beta = math.sqrt((1 - 1 / math.e)
                      * (_log_comb(n, k) + ell * math.log(n) + math.log(2)))
     lam_star = 2 * n * ((1 - 1 / math.e) * alpha + beta) ** 2 / eps ** 2
-    return int(math.ceil(lam_star / lb)), batches
+    return int(math.ceil(lam_star / lb)), (batches if pool is None
+                                           else pool.ensure(0))
+
+
+def _pool_take(pool, want: int) -> list:
+    """Exactly ``want`` batches from a sketch pool, as the sample prefix.
+
+    Slicing keeps ``theta_cap`` meaningful against a pre-populated serving
+    pool, and raising (rather than silently under-sampling) preserves the
+    IMM θ bound when the pool's budget can't supply the batches.
+    """
+    got = pool.ensure(want)
+    if len(got) < want:
+        raise ValueError(
+            f"sketch pool capacity {len(got)} < {want} batches required by "
+            "IMM sampling — raise the pool's max_batches / memory budget, "
+            "or lower θ (larger eps, smaller theta_cap)")
+    return got[:want]
 
 
 # ------------------------------------------------------ greedy max-k-cover
+def _count_fn(use_kernel: bool):
+    """(B, V, W) visited × (B, W) active → (B, V) marginal-gain counts."""
+    if use_kernel:
+        return ops.cover_counts_batched
+    return jax.vmap(lambda vis, act: jnp.sum(
+        bitmask.popcount(vis & act[None, :]), -1).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
+def _greedy_extend_jit(visited, active, k: int, use_kernel: bool):
+    """k rounds of greedy selection as one on-device ``lax.fori_loop``.
+
+    Each round computes all-vertex marginal gains with the coverage kernel,
+    argmaxes on device, and strips the winner's colors from the active mask —
+    no host synchronization until the caller fetches the result.
+    """
+    count = _count_fn(use_kernel)
+
+    def body(i, carry):
+        seeds, act = carry
+        counts = count(visited, act).sum(0)                     # (V,)
+        sel = jnp.argmax(counts).astype(jnp.int32)
+        seeds = seeds.at[i].set(sel)
+        hit = jax.lax.dynamic_index_in_dim(visited, sel, axis=1,
+                                           keepdims=False)      # (B, W)
+        return seeds, act & ~hit
+
+    seeds0 = jnp.zeros((k,), jnp.int32)
+    seeds, active = jax.lax.fori_loop(0, k, body, (seeds0, active))
+    uncovered = jnp.sum(bitmask.popcount(active)).astype(jnp.int32)
+    return seeds, active, uncovered
+
+
+def initial_active(num_batches: int, num_colors: int) -> jnp.ndarray:
+    """(B, W) all-colors-uncovered mask (tail bits past num_colors zeroed)."""
+    w = bitmask.num_words(num_colors)
+    return jnp.broadcast_to(
+        jnp.asarray(bitmask.color_tail_mask(num_colors)), (num_batches, w))
+
+
+def greedy_extend(visited: jnp.ndarray, active: jnp.ndarray, k: int,
+                  use_kernel: bool = True):
+    """Extend a partial cover by ``k`` greedy picks from ``active``.
+
+    Returns (seeds (k,) int32 device array, new active (B, W), uncovered
+    color count int32 scalar).  This is the shared incremental kernel: pass
+    ``initial_active(...)`` for offline selection, or an exclusion-filtered
+    mask for online marginal-gain queries.
+    """
+    return _greedy_extend_jit(visited, active, k, use_kernel)
+
+
 def greedy_max_cover(visited: jnp.ndarray, k: int, num_colors: int,
                      use_kernel: bool = True):
     """Greedy max-k-cover over a (B, V, W) RRR collection.
 
-    Returns (seeds (k,) int32, covered fraction float).  Marginal gains are
-    per-batch popcount reductions (`kernels.coverage`), summed over batches.
+    Returns (seeds (k,) int32, covered fraction float).  Thin host wrapper
+    over ``greedy_extend`` — one device program, two fetches.
     """
     b, v, w = visited.shape
     theta = b * num_colors
-    active = jnp.broadcast_to(
-        jnp.asarray(bitmask.color_tail_mask(num_colors)), (b, w)).copy()
-    count_fn = (jax.vmap(lambda vis, act: ops.cover_counts(vis, act))
-                if use_kernel else
-                jax.vmap(lambda vis, act: jnp.sum(
-                    bitmask.popcount(vis & act[None, :]), -1).astype(jnp.int32)))
+    seeds, _, uncovered = greedy_extend(
+        visited, initial_active(b, num_colors), k, use_kernel)
+    return np.asarray(seeds), (theta - int(uncovered)) / theta
 
+
+def greedy_max_cover_ref(visited: jnp.ndarray, k: int, num_colors: int,
+                         use_kernel: bool = True):
+    """Reference host-loop greedy (pre-refactor semantics) for equivalence
+    tests: per-iteration host argmax, same tie-breaking as the jit path."""
+    b, v, w = visited.shape
+    theta = b * num_colors
+    active = np.asarray(initial_active(b, num_colors)).copy()
+    count = _count_fn(use_kernel)
     seeds = []
     for _ in range(k):
-        counts = count_fn(visited, active).sum(0)           # (V,)
+        counts = count(visited, jnp.asarray(active)).sum(0)     # (V,)
         sel = int(jnp.argmax(counts))
         seeds.append(sel)
-        active = active & ~visited[:, sel, :]
-    covered = theta - int(jnp.sum(bitmask.popcount(active)))
+        active &= ~np.asarray(visited[:, sel, :])
+    covered = theta - int(np.unpackbits(active.view(np.uint8)).sum())
     return np.asarray(seeds, np.int32), covered / theta
 
 
 def coverage_of(visited: jnp.ndarray, seeds, num_colors: int) -> float:
     """Fraction of RRR sets hit by ``seeds`` (σ(S) ≈ n × this)."""
     b, v, w = visited.shape
-    active = jnp.broadcast_to(
-        jnp.asarray(bitmask.color_tail_mask(num_colors)), (b, w))
+    active = initial_active(b, num_colors)
     for s in np.asarray(seeds):
         active = active & ~visited[:, int(s), :]
     theta = b * num_colors
@@ -131,16 +234,35 @@ class IMMResult:
 
 def run_imm(g: csr.Graph, k: int, eps: float = 0.3, *, ell: float = 1.0,
             num_colors: int = 64, master_seed: int = 0,
-            theta_cap: int | None = 100_000, **sample_kw) -> IMMResult:
-    """Full IMM: θ estimation → top-up sampling → greedy selection."""
-    theta, batches = estimate_theta(g, k, eps, ell, num_colors, master_seed)
+            theta_cap: int | None = 100_000, pool=None,
+            **sample_kw) -> IMMResult:
+    """Full IMM: θ estimation → top-up sampling → greedy selection.
+
+    ``pool``: optional sketch pool (module docstring); batches come from and
+    stay in the pool, so a serving process can reuse them for online queries.
+    Because batch ``b`` is a pure function of ``(graph, master_seed, b)``,
+    routing through a *fresh* (never-refreshed) pool with the same
+    ``master_seed``/``num_colors`` reproduces the pool-less result exactly;
+    selection always uses the first ``⌈θ/colors⌉`` pool slots, so a larger
+    pre-populated pool still respects ``theta_cap``.  A pool whose capacity
+    cannot supply θ raises rather than silently weakening the bound.
+    """
+    if pool is not None and pool.num_colors != num_colors:
+        raise ValueError(f"pool colors {pool.num_colors} != {num_colors}")
+    g_rev = csr.transpose(g) if pool is None else None
+    theta, batches = estimate_theta(g, k, eps, ell, num_colors, master_seed,
+                                    g_rev=g_rev, pool=pool)
     if theta_cap:
         theta = min(theta, theta_cap)
-    g_rev = csr.transpose(g)
-    while len(batches) * num_colors < theta:
-        batches.append(rrr.sample_batch(g_rev, num_colors, master_seed,
-                                        len(batches), **sample_kw))
-    visited = rrr.stack_visited(batches)
+    want = -(-theta // num_colors)
+    if pool is not None:
+        batches = _pool_take(pool, want)
+        visited = pool.visited_stack()[:want]
+    else:
+        while len(batches) < want:
+            batches.append(rrr.sample_batch(g_rev, num_colors, master_seed,
+                                            len(batches), **sample_kw))
+        visited = rrr.stack_visited(batches)
     seeds, cov = greedy_max_cover(visited, k, num_colors)
     return IMMResult(
         seeds=seeds, sigma_estimate=cov * g.num_vertices,

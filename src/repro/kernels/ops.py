@@ -38,6 +38,17 @@ def cover_counts(visited, active):
     return out[:Vp] if pad else out
 
 
+def cover_counts_batched(visited, active):
+    """Per-batch marginal-gain counts: (B, V, W) × (B, W) → (B, V).
+
+    vmap of the coverage kernel over the batch axis — the per-batch grid and
+    BlockSpecs are unchanged, so the TPU lowering is the same row sweep with
+    a batched outer grid dimension.  Shared by the incremental greedy kernel
+    (`core.imm.greedy_extend`) and the online query engine.
+    """
+    return jax.vmap(cover_counts)(visited, active)
+
+
 def flash_attention(q, k, v, *, causal=True, scale=None, kv_offset=0,
                     block_q=128, block_k=128):
     """Blocked online-softmax attention (prefill hot-spot)."""

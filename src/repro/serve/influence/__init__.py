@@ -1,0 +1,25 @@
+"""Online influence-query serving: persistent RRR sketch store + engine.
+
+Fused BPTs make RRR sampling cheap; this package makes the samples a
+long-lived, queryable asset instead of a throwaway (DiFuseR-style sketch
+reuse).  Lifecycle: **sample** a pool of columnar ``(V, W)`` bitmask batches
+under a device-memory budget → **serve** top-k / σ(S) / marginal-gain
+queries against it → **refresh** stale batches epoch by epoch → **persist**
+and restore through the checkpoint manifest format.
+
+    store   = SketchStore(graph, PoolConfig(num_colors=64, max_batches=32))
+    store.ensure(16)                          # sample 16 fused batches
+    engine  = QueryEngine(store)
+    batcher = MicroBatcher(engine, cache=ResultCache())
+    t0 = batcher.submit_top_k(8)
+    t1 = batcher.submit_sigma([3, 17, 42])
+    t2 = batcher.submit_marginal(exclude=[3, 17])
+    results = batcher.flush()                 # one padded device dispatch/kind
+"""
+from repro.serve.influence.batcher import MicroBatcher
+from repro.serve.influence.cache import ResultCache
+from repro.serve.influence.engine import QueryEngine
+from repro.serve.influence.sketch_store import PoolConfig, SketchStore
+
+__all__ = ["MicroBatcher", "PoolConfig", "QueryEngine", "ResultCache",
+           "SketchStore"]

@@ -1,0 +1,120 @@
+"""Micro-batcher: many concurrent callers, one device dispatch per kind.
+
+Callers ``submit_*`` queries and later ``flush()``; the batcher resolves
+cache hits host-side, packs the remaining σ(S)/marginal queries into the
+engine's fixed ``(query_slots, max_seeds)`` tensors (chunking when a flush
+overflows the slots — every chunk reuses the same compiled program), runs
+one dispatch per query kind, and fans results back out by ticket.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.serve.influence import cache as cache_lib
+from repro.serve.influence import engine as engine_lib
+
+TOP_K, SIGMA, MARGINAL = "top_k", "sigma", "marginal"
+
+
+@dataclasses.dataclass(frozen=True)
+class _Pending:
+    ticket: int
+    kind: str
+    key: tuple          # canonical cache key
+    seeds: tuple        # seed / exclusion set as submitted (deduped, sorted)
+
+
+class MicroBatcher:
+    """Pads concurrent influence queries into slotted batch dispatches."""
+
+    def __init__(self, engine: engine_lib.QueryEngine,
+                 cache: cache_lib.ResultCache | None = None):
+        self.engine = engine
+        self.cache = cache
+        self._pending: list[_Pending] = []
+        self._next_ticket = 0
+        self.dispatches = 0         # device dispatches issued (observability)
+
+    # ------------------------------------------------------------- submit
+    def _submit(self, kind: str, key: tuple, seeds: tuple) -> int:
+        t = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append(_Pending(t, kind, key, seeds))
+        return t
+
+    def submit_top_k(self, k: int) -> int:
+        return self._submit(TOP_K, (int(k),), (int(k),))
+
+    def _checked_key(self, seeds) -> tuple:
+        """Canonicalize + validate at submit time: an oversized seed set
+        must fail on the offending caller, never abort a shared flush."""
+        key = cache_lib.seed_key(seeds)
+        if len(key) > self.engine.max_seeds:
+            raise ValueError(f"seed set of {len(key)} > "
+                             f"max_seeds={self.engine.max_seeds}")
+        return key
+
+    def submit_sigma(self, seed_set) -> int:
+        key = self._checked_key(seed_set)
+        return self._submit(SIGMA, key, key)
+
+    def submit_marginal(self, exclude) -> int:
+        key = self._checked_key(exclude)
+        return self._submit(MARGINAL, key, key)
+
+    # -------------------------------------------------------------- flush
+    def _lookup(self, p: _Pending):
+        if self.cache is None:
+            return None
+        return self.cache.get(self.engine.store.version, p.kind, p.key)
+
+    def _store(self, p: _Pending, value) -> None:
+        if self.cache is not None:
+            self.cache.put(self.engine.store.version, p.kind, p.key, value)
+
+    def flush(self) -> dict[int, Any]:
+        """Answer every pending query; returns {ticket: result}.
+
+        Results: top-k → (seeds, σ estimate); sigma → float; marginal →
+        (V,) gain vector.  Identical queries in one flush share a slot.
+        """
+        pending, self._pending = self._pending, []
+        results: dict[int, Any] = {}
+        todo: dict[str, dict[tuple, list[_Pending]]] = {}
+        for p in pending:
+            hit = self._lookup(p)
+            if hit is not None:
+                results[p.ticket] = hit
+            else:
+                todo.setdefault(p.kind, {}).setdefault(p.key, []).append(p)
+
+        for key, ps in todo.get(TOP_K, {}).items():
+            value = self.engine.top_k(key[0])
+            self.dispatches += 1
+            for p in ps:
+                results[p.ticket] = value
+            self._store(ps[0], value)
+
+        for kind, run in ((SIGMA, self._run_sigma),
+                          (MARGINAL, self._run_marginal)):
+            groups = list(todo.get(kind, {}).items())
+            slots = self.engine.query_slots
+            for i in range(0, len(groups), slots):
+                chunk = groups[i:i + slots]
+                values = run([ps[0].seeds for _, ps in chunk])
+                self.dispatches += 1
+                for (key, ps), value in zip(chunk, values):
+                    for p in ps:
+                        results[p.ticket] = value
+                    self._store(ps[0], value)
+        return results
+
+    def _run_sigma(self, seed_sets):
+        return list(self.engine.sigma(seed_sets))
+
+    def _run_marginal(self, excl_sets):
+        seeds, mask = engine_lib.pad_queries(
+            excl_sets, self.engine.query_slots, self.engine.max_seeds)
+        gains = self.engine.marginal_padded(seeds, mask)
+        return [gains[q] for q in range(len(excl_sets))]

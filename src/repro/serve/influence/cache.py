@@ -1,0 +1,54 @@
+"""Epoch-keyed LRU result cache for influence queries.
+
+Entries are tagged with the sketch pool ``version`` (epoch + size) they
+were computed against; a lookup under any other version is a miss and
+evicts the stale entry, so a pool refresh invalidates the whole working set
+without a scan.  Keys are canonicalized seed-set tuples, making the cache
+insensitive to caller-side ordering/duplication of seeds.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Hashable
+
+
+def seed_key(seeds) -> tuple:
+    """Canonical cache key for a seed set (order/duplicate insensitive)."""
+    return tuple(sorted({int(s) for s in seeds}))
+
+
+class ResultCache:
+    """LRU over (kind, key) entries, each pinned to a pool version."""
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = capacity
+        self._entries: OrderedDict[tuple, tuple[Hashable, Any]] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, version: Hashable, kind: str, key: Hashable):
+        """Value if present AND computed under ``version``; else None."""
+        entry = self._entries.get((kind, key))
+        if entry is None:
+            self.misses += 1
+            return None
+        ver, value = entry
+        if ver != version:
+            del self._entries[(kind, key)]          # stale epoch
+            self.misses += 1
+            return None
+        self._entries.move_to_end((kind, key))
+        self.hits += 1
+        return value
+
+    def put(self, version: Hashable, kind: str, key: Hashable, value) -> None:
+        self._entries[(kind, key)] = (version, value)
+        self._entries.move_to_end((kind, key))
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()

@@ -1,0 +1,152 @@
+"""Batched influence-query engine over a sketch pool.
+
+Three query types, all answered from the pool's columnar (B, V, W) bitmask
+stack with jit-compiled, static-shape device programs:
+
+* **top-k** — greedy max-k-cover seed selection, via the shared incremental
+  kernel ``core.imm.greedy_extend`` (the same ``lax.fori_loop`` program
+  offline ``run_imm`` uses);
+* **σ(S)** — influence estimate for an arbitrary seed set: the covered
+  colors are the OR of the seeds' mask rows, σ(S) ≈ n · covered/θ;
+* **marginal gain with exclusions** — per-vertex gain Δσ(v | X) against an
+  active mask with the exclusion set X's colors stripped, one
+  ``kernels.ops.cover_counts`` sweep per pool batch.
+
+σ(S)/marginal queries are *slotted*: the engine compiles one program for a
+fixed ``(query_slots, max_seeds)`` shape and the batcher pads every flush
+into it, so concurrent callers share a single device dispatch and no query
+mix triggers recompilation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmask, imm
+from repro.kernels import ops
+from repro.serve.influence import sketch_store
+
+
+def _frozen(arr: np.ndarray) -> np.ndarray:
+    """Engine results are shared across callers (cache hits, deduped
+    tickets) — freeze them so one caller's in-place edit can't corrupt
+    another's answer."""
+    arr.flags.writeable = False
+    return arr
+
+
+def pad_queries(seed_sets, query_slots: int, max_seeds: int):
+    """Pack ragged seed sets into (Q, S) index + validity-mask tensors."""
+    if len(seed_sets) > query_slots:
+        raise ValueError(f"{len(seed_sets)} queries > {query_slots} slots")
+    seeds = np.zeros((query_slots, max_seeds), np.int32)
+    mask = np.zeros((query_slots, max_seeds), bool)
+    for q, s in enumerate(seed_sets):
+        s = list(s)
+        if len(s) > max_seeds:
+            raise ValueError(f"seed set of {len(s)} > max_seeds={max_seeds}")
+        seeds[q, :len(s)] = s
+        mask[q, :len(s)] = True
+    return jnp.asarray(seeds), jnp.asarray(mask)
+
+
+def _union_rows(visited, seeds, mask):
+    """OR of the selected mask rows: (B,V,W) × (Q,S) → (B,Q,W) covered."""
+    b, v, w = visited.shape
+    q, s = seeds.shape
+    rows = jnp.take(visited, seeds.reshape(-1), axis=1).reshape(b, q, s, w)
+    rows = jnp.where(mask[None, :, :, None], rows, jnp.uint32(0))
+    return jax.lax.reduce(rows, jnp.uint32(0), jax.lax.bitwise_or, (2,))
+
+
+@functools.partial(jax.jit, static_argnames=("num_colors",))
+def _sigma_counts(visited, seeds, mask, num_colors: int):
+    """Covered-color counts per query slot: (Q,) int32."""
+    tail = jnp.asarray(bitmask.color_tail_mask(num_colors))
+    covered = _union_rows(visited, seeds, mask) & tail[None, None, :]
+    return jnp.sum(bitmask.popcount(covered), axis=(0, 2)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_colors", "use_kernel"))
+def _marginal_counts(visited, excl_seeds, excl_mask, num_colors: int,
+                     use_kernel: bool):
+    """Per-vertex marginal-gain counts per exclusion slot: (Q, V) int32."""
+    tail = jnp.asarray(bitmask.color_tail_mask(num_colors))
+    active = tail[None, None, :] & ~_union_rows(visited, excl_seeds,
+                                                excl_mask)     # (B, Q, W)
+    count = (ops.cover_counts_batched if use_kernel
+             else imm._count_fn(False))
+    return jax.lax.map(lambda act: count(visited, act).sum(0),
+                       jnp.swapaxes(active, 0, 1))             # (Q, V)
+
+
+class QueryEngine:
+    """Static-shape query programs bound to one `SketchStore`."""
+
+    def __init__(self, store: sketch_store.SketchStore, *,
+                 query_slots: int = 8, max_seeds: int = 8,
+                 use_kernel: bool = True):
+        self.store = store
+        self.query_slots = query_slots
+        self.max_seeds = max_seeds
+        self.use_kernel = use_kernel
+
+    @property
+    def _n(self) -> int:
+        return self.store.graph.num_vertices
+
+    @property
+    def _theta(self) -> int:
+        return self.store.num_samples
+
+    # -------------------------------------------------------------- top-k
+    def top_k(self, k: int) -> tuple[np.ndarray, float]:
+        """Greedy seed selection over the pool: (seeds (k,), σ estimate)."""
+        seeds, cov = imm.greedy_max_cover(
+            self.store.visited_stack(), k, self.store.num_colors,
+            use_kernel=self.use_kernel)
+        return _frozen(seeds), cov * self._n
+
+    # --------------------------------------------------------------- σ(S)
+    def sigma_padded(self, seeds: jnp.ndarray, mask: jnp.ndarray) -> np.ndarray:
+        """σ estimates for pre-padded (Q, S) queries (one device dispatch)."""
+        counts = _sigma_counts(self.store.visited_stack(), seeds, mask,
+                               self.store.num_colors)
+        return _frozen(np.asarray(counts, np.float64) * self._n / self._theta)
+
+    def sigma(self, seed_sets) -> np.ndarray:
+        """Convenience: σ(S) for ≤ ``query_slots`` ragged seed sets."""
+        seeds, mask = pad_queries(seed_sets, self.query_slots, self.max_seeds)
+        return self.sigma_padded(seeds, mask)[:len(seed_sets)]
+
+    # ----------------------------------------------------- marginal gains
+    def marginal_padded(self, excl_seeds: jnp.ndarray,
+                        excl_mask: jnp.ndarray) -> np.ndarray:
+        """(Q, V) per-vertex Δσ(v | X) for pre-padded exclusion sets."""
+        counts = _marginal_counts(self.store.visited_stack(), excl_seeds,
+                                  excl_mask, self.store.num_colors,
+                                  self.use_kernel)
+        return _frozen(np.asarray(counts, np.float64) * self._n / self._theta)
+
+    def marginal_gains(self, exclude) -> np.ndarray:
+        """(V,) per-vertex marginal influence gain given exclusions.
+
+        Vertices already in ``exclude`` naturally score ~0: their colors are
+        stripped from the active mask.
+        """
+        seeds, mask = pad_queries([exclude], self.query_slots, self.max_seeds)
+        return self.marginal_padded(seeds, mask)[0]
+
+    def best_extension(self, exclude, num: int = 1) -> np.ndarray:
+        """Resume greedy selection after ``exclude`` via the shared
+        incremental kernel — exact marginal-gain argmax, not a rescore."""
+        visited = self.store.visited_stack()
+        active = imm.initial_active(visited.shape[0], self.store.num_colors)
+        for s in exclude:
+            active = active & ~visited[:, int(s), :]
+        seeds, _, _ = imm.greedy_extend(visited, active, num,
+                                        use_kernel=self.use_kernel)
+        return np.asarray(seeds)

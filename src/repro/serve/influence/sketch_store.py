@@ -1,0 +1,202 @@
+"""Persistent pool of fused-BPT RRR sketch batches.
+
+The store owns a device-resident collection of columnar ``(V, W)`` RRR
+bitmask batches (`core.rrr.RRRBatch`) sampled on the reversed graph, under a
+device-memory budget.  It implements the sketch-pool protocol that
+``core.imm.run_imm`` / ``estimate_theta`` consume (``num_colors``,
+``master_seed``, ``ensure``), so offline IMM and the online
+`engine.QueryEngine` share one sampled asset.
+
+Freshness is tracked per batch with an **epoch** tag: ``refresh()`` bumps
+the store epoch and resamples the oldest batches with brand-new batch
+indices (hence new RNG streams — never a repeat of a retired sample).  Any
+mutation changes ``version``, which keys the result cache.
+
+Persistence rides the checkpoint manifest format (`checkpoint.manager`):
+``save()`` writes an atomic ``step_<N>/{manifest.json, leaf_*.npy}``
+snapshot of the pool tensors + counters; ``SketchStore.restore`` rebuilds a
+bit-identical pool (uint32 masks round-trip exactly through ``.npy``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import manager
+from repro.core import bitmask, rrr
+from repro.graph import csr
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    """Sizing + sampling knobs for a sketch pool.
+
+    ``memory_budget_mb`` (when set) caps ``max_batches`` by the device bytes
+    of one ``(V, W)`` uint32 batch — the pool never allocates past it.
+    """
+    num_colors: int = 64
+    max_batches: int = 64
+    memory_budget_mb: float | None = None
+    master_seed: int = 0
+    sample_kw: dict = dataclasses.field(default_factory=dict)
+
+
+class SketchStore:
+    """Epoch-tagged, budgeted, persistable pool of RRR sketch batches."""
+
+    def __init__(self, g: csr.Graph, config: PoolConfig = PoolConfig(), *,
+                 g_rev: csr.Graph | None = None):
+        self.graph = g
+        self.g_rev = g_rev if g_rev is not None else csr.transpose(g)
+        self.config = config
+        self.epoch = 0
+        self.next_batch_index = 0
+        self.batches: list[rrr.RRRBatch] = []
+        self.batch_epochs: list[int] = []
+        self._stack: jnp.ndarray | None = None
+
+    # ------------------------------------------------------------- sizing
+    @property
+    def num_colors(self) -> int:
+        return self.config.num_colors
+
+    @property
+    def master_seed(self) -> int:
+        return self.config.master_seed
+
+    @property
+    def bytes_per_batch(self) -> int:
+        w = bitmask.num_words(self.config.num_colors)
+        return self.graph.num_vertices * w * 4
+
+    @property
+    def capacity(self) -> int:
+        """Max batches the budget admits (≥ 1 so the pool is never unusable)."""
+        cap = self.config.max_batches
+        if self.config.memory_budget_mb is not None:
+            cap = min(cap, int(self.config.memory_budget_mb * 2 ** 20
+                               // self.bytes_per_batch))
+        return max(cap, 1)
+
+    @property
+    def num_samples(self) -> int:
+        return len(self.batches) * self.config.num_colors
+
+    @property
+    def version(self) -> tuple[int, int]:
+        """Cache key: changes on refresh AND on pool growth."""
+        return (self.epoch, len(self.batches))
+
+    # ----------------------------------------------------------- sampling
+    def _sample(self) -> rrr.RRRBatch:
+        b = rrr.sample_batch(self.g_rev, self.config.num_colors,
+                             self.config.master_seed, self.next_batch_index,
+                             **self.config.sample_kw)
+        self.next_batch_index += 1
+        return b
+
+    def ensure(self, num_batches: int) -> list[rrr.RRRBatch]:
+        """Grow the pool to ≥ ``num_batches`` (clamped to capacity).
+
+        Sketch-pool protocol entry point for ``core.imm``; returns the live
+        batch list (callers must not mutate it).
+        """
+        want = min(num_batches, self.capacity)
+        grew = False
+        while len(self.batches) < want:
+            self.batches.append(self._sample())
+            self.batch_epochs.append(self.epoch)
+            grew = True
+        if grew:
+            self._stack = None
+        return self.batches
+
+    def visited_stack(self) -> jnp.ndarray:
+        """(B, V, W) stacked masks for the query engine (cached per version)."""
+        if not self.batches:
+            raise ValueError("empty pool — call ensure() first")
+        if self._stack is None:
+            self._stack = rrr.stack_visited(self.batches)
+        return self._stack
+
+    # ------------------------------------------------------------ refresh
+    def refresh(self, fraction: float = 0.25) -> list[int]:
+        """Resample the oldest-epoch batches with fresh RNG streams.
+
+        Bumps the store epoch, then replaces ``ceil(fraction · B)`` batches
+        (oldest epoch tag first, lowest slot on ties) with new samples drawn
+        at never-before-used batch indices.  Returns the replaced slots.
+        """
+        if not self.batches:
+            return []
+        self.epoch += 1
+        count = min(len(self.batches),
+                    max(1, math.ceil(fraction * len(self.batches))))
+        order = sorted(range(len(self.batches)),
+                       key=lambda i: (self.batch_epochs[i], i))
+        slots = order[:count]
+        for i in slots:
+            self.batches[i] = self._sample()
+            self.batch_epochs[i] = self.epoch
+        self._stack = None
+        return slots
+
+    # -------------------------------------------------------- persistence
+    def _tree(self) -> dict[str, Any]:
+        return {
+            "visited": np.stack([np.asarray(b.visited) for b in self.batches]),
+            "roots": np.stack([b.roots for b in self.batches]),
+            "batch_indices": np.asarray(
+                [b.batch_index for b in self.batches], np.int64),
+            "batch_epochs": np.asarray(self.batch_epochs, np.int64),
+            "edge_visits": np.asarray(
+                [[b.fused_edge_visits, b.unfused_edge_visits]
+                 for b in self.batches], np.int64),
+            "counters": np.asarray(
+                [self.epoch, self.next_batch_index,
+                 self.config.master_seed, self.config.num_colors], np.int64),
+        }
+
+    def save(self, directory: str, *, keep: int = 3) -> None:
+        """Atomic manifest snapshot; step number = store epoch."""
+        manager.save(directory, self.epoch, self._tree(), keep=keep)
+
+    @classmethod
+    def restore(cls, directory: str, g: csr.Graph,
+                config: PoolConfig = PoolConfig(), *,
+                step: int | None = None,
+                g_rev: csr.Graph | None = None) -> "SketchStore":
+        """Rebuild a bit-identical pool from the latest (or given) snapshot."""
+        step = step if step is not None else manager.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no sketch-pool snapshot in {directory}")
+        d = os.path.join(directory, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        target = {e["path"]: np.zeros(e["shape"], manager._np_dtype(e["dtype"]))
+                  for e in manifest["leaves"]}
+        tree, _ = manager.restore(directory, target, step)
+        counters = np.asarray(tree["counters"])
+        if int(counters[3]) != config.num_colors:
+            raise ValueError(f"snapshot colors {int(counters[3])} != "
+                             f"config {config.num_colors}")
+        config = dataclasses.replace(config, master_seed=int(counters[2]))
+        store = cls(g, config, g_rev=g_rev)
+        store.epoch = int(counters[0])
+        store.next_batch_index = int(counters[1])
+        visited = np.asarray(tree["visited"])
+        roots = np.asarray(tree["roots"])
+        indices = np.asarray(tree["batch_indices"])
+        visits = np.asarray(tree["edge_visits"])
+        store.batches = [
+            rrr.RRRBatch(jnp.asarray(visited[i]), roots[i], int(indices[i]),
+                         int(visits[i, 0]), int(visits[i, 1]))
+            for i in range(visited.shape[0])]
+        store.batch_epochs = [int(e) for e in np.asarray(tree["batch_epochs"])]
+        return store

@@ -1,8 +1,23 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 real device;
 only launch/dryrun.py forces 512 placeholder devices (and only in its own
 process)."""
+import importlib.util
+import os
+import sys
+
 import numpy as np
 import pytest
+
+# Property tests import hypothesis at module scope; in sandboxes where the
+# declared dependency can't be installed, collection must not die — install
+# the deterministic fallback (same API subset, seeded examples) instead.
+if importlib.util.find_spec("hypothesis") is None:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py"))
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
 
 
 @pytest.fixture(scope="session")

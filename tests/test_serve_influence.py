@@ -1,0 +1,226 @@
+"""Serving subsystem: sketch-store persistence, engine-vs-IMM agreement,
+batched σ(S) vs forward simulation, micro-batching, cache epoch semantics."""
+import numpy as np
+import pytest
+
+from repro.core import imm, rrr
+from repro.graph import generators
+from repro.serve.influence import (MicroBatcher, PoolConfig, QueryEngine,
+                                   ResultCache, SketchStore)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generators.powerlaw_cluster(200, 6.0, prob=0.25, seed=13)
+
+
+@pytest.fixture(scope="module")
+def store(graph):
+    s = SketchStore(graph, PoolConfig(num_colors=64, max_batches=32,
+                                      master_seed=3))
+    s.ensure(8)
+    return s
+
+
+def test_pool_budget_caps_growth(graph):
+    cfg = PoolConfig(num_colors=64, max_batches=32,
+                     memory_budget_mb=3 * graph.num_vertices * 2 * 4 / 2**20)
+    s = SketchStore(graph, cfg)
+    assert s.capacity == 3
+    s.ensure(10)
+    assert len(s.batches) == 3, "memory budget must cap the pool"
+
+
+def test_save_restore_bit_identical(store, graph, tmp_path):
+    store.save(str(tmp_path))
+    r = SketchStore.restore(str(tmp_path), graph,
+                            PoolConfig(num_colors=64, max_batches=32))
+    np.testing.assert_array_equal(np.asarray(store.visited_stack()),
+                                  np.asarray(r.visited_stack()))
+    assert r.epoch == store.epoch
+    assert r.next_batch_index == store.next_batch_index
+    assert r.master_seed == store.master_seed
+    assert [b.batch_index for b in r.batches] == \
+        [b.batch_index for b in store.batches]
+    for a, b in zip(store.batches, r.batches):
+        np.testing.assert_array_equal(a.roots, b.roots)
+        assert (a.fused_edge_visits, a.unfused_edge_visits) == \
+            (b.fused_edge_visits, b.unfused_edge_visits)
+
+
+def test_restore_rejects_color_mismatch(store, graph, tmp_path):
+    store.save(str(tmp_path))
+    with pytest.raises(ValueError):
+        SketchStore.restore(str(tmp_path), graph,
+                            PoolConfig(num_colors=128))
+
+
+def test_engine_topk_matches_imm_on_same_pool(store):
+    seeds_engine, sigma = QueryEngine(store).top_k(4)
+    seeds_imm, cov = imm.greedy_max_cover(store.visited_stack(), 4,
+                                          store.num_colors)
+    np.testing.assert_array_equal(seeds_engine, seeds_imm)
+    assert sigma == pytest.approx(cov * store.graph.num_vertices)
+    ref, _ = imm.greedy_max_cover_ref(store.visited_stack(), 4,
+                                      store.num_colors)
+    np.testing.assert_array_equal(seeds_engine, ref)
+
+
+def test_run_imm_through_pool_identity(graph):
+    plain = imm.run_imm(graph, k=3, eps=0.5, num_colors=64, master_seed=5,
+                        theta_cap=1024)
+    pool = SketchStore(graph, PoolConfig(num_colors=64, max_batches=64,
+                                         master_seed=5))
+    routed = imm.run_imm(graph, k=3, eps=0.5, num_colors=64, master_seed=5,
+                         theta_cap=1024, pool=pool)
+    np.testing.assert_array_equal(plain.seeds, routed.seeds)
+    assert plain.coverage == routed.coverage
+    assert plain.theta == routed.theta
+    assert len(pool.batches) == routed.num_batches, "batches live in the pool"
+
+
+def test_run_imm_raises_on_undersized_pool(graph):
+    """A budget-capped pool that can't supply θ must fail loudly — silently
+    under-sampling would void the (1 − 1/e − ε) guarantee."""
+    pool = SketchStore(graph, PoolConfig(num_colors=64, max_batches=2,
+                                         master_seed=5))
+    with pytest.raises(ValueError, match="capacity"):
+        imm.run_imm(graph, k=3, eps=0.5, num_colors=64, master_seed=5,
+                    theta_cap=1024, pool=pool)
+
+
+def test_run_imm_theta_cap_with_prepopulated_pool(graph):
+    """Selection uses the first ⌈θ/colors⌉ pool slots, so a big serving pool
+    still honors theta_cap and reproduces the pool-less result."""
+    plain = imm.run_imm(graph, k=3, eps=0.5, num_colors=64, master_seed=5,
+                        theta_cap=512)
+    pool = SketchStore(graph, PoolConfig(num_colors=64, max_batches=64,
+                                         master_seed=5))
+    pool.ensure(32)                       # serving pool ≫ theta_cap
+    routed = imm.run_imm(graph, k=3, eps=0.5, num_colors=64, master_seed=5,
+                         theta_cap=512, pool=pool)
+    assert routed.theta == plain.theta <= 512
+    assert routed.num_batches == plain.num_batches
+    np.testing.assert_array_equal(plain.seeds, routed.seeds)
+    assert len(pool.batches) == 32, "pool keeps its extra serving batches"
+
+
+def test_batched_sigma_matches_forward_simulation():
+    g = generators.erdos_renyi(150, 5.0, prob=0.15, seed=8)
+    s = SketchStore(g, PoolConfig(num_colors=128, max_batches=64,
+                                  master_seed=11))
+    s.ensure(64)                     # 8192 RRR samples
+    eng = QueryEngine(s, max_seeds=8)
+    sets = [[0], [3, 50, 99], [10, 20, 30, 40, 50]]
+    sig = eng.sigma(sets)
+    for est, seed_set in zip(sig, sets):
+        fwd = imm.simulate_influence(g, seed_set, num_trials=1024)
+        # Two Monte-Carlo estimates of σ(S): 10% relative, 1-vertex floor
+        # (tiny σ values put 10% below one seed's self-influence).
+        assert abs(est - fwd) < max(0.10 * fwd, 1.0), (seed_set, est, fwd)
+
+
+def test_sigma_matches_coverage_of(store):
+    eng = QueryEngine(store)
+    seeds, _ = eng.top_k(3)
+    est = eng.sigma([seeds.tolist()])[0]
+    cov = imm.coverage_of(store.visited_stack(), seeds, store.num_colors)
+    assert est == pytest.approx(cov * store.graph.num_vertices)
+
+
+def test_marginal_gains_exclusions(store):
+    eng = QueryEngine(store)
+    seeds, _ = eng.top_k(3)
+    gains = eng.marginal_gains(seeds[:2].tolist())
+    assert gains[seeds[0]] == 0 and gains[seeds[1]] == 0
+    # Exact greedy extension must pick the global argmax of the gains.
+    assert int(np.argmax(gains)) == \
+        int(eng.best_extension(seeds[:2].tolist(), 1)[0]) == int(seeds[2])
+
+
+def test_greedy_extend_resumes_full_greedy(store):
+    """Incremental kernel contract: extending a prefix reproduces the rest."""
+    vis = store.visited_stack()
+    full, _ = imm.greedy_max_cover(vis, 5, store.num_colors)
+    ext = QueryEngine(store).best_extension(full[:2].tolist(), 3)
+    np.testing.assert_array_equal(full[2:], ext)
+
+
+def test_batcher_dedups_and_pads(store):
+    eng = QueryEngine(store, query_slots=2, max_seeds=4)
+    b = MicroBatcher(eng)
+    t = [b.submit_sigma([1, 2]), b.submit_sigma([2, 1]),     # same canonical
+         b.submit_sigma([5]), b.submit_sigma([9, 10, 11])]   # overflow → 2nd
+    r = b.flush()
+    assert r[t[0]] == r[t[1]]
+    assert b.dispatches == 2, "4 queries, 3 unique, 2 slots → 2 dispatches"
+    single = eng.sigma([[5]])[0]
+    assert r[t[2]] == pytest.approx(single)
+
+
+def test_batcher_rejects_oversized_seed_set_at_submit(store):
+    """Invalid queries fail on the offending caller; a shared flush must
+    never lose other callers' tickets to someone else's bad input."""
+    b = MicroBatcher(QueryEngine(store, max_seeds=2))
+    ok = b.submit_sigma([1, 2])
+    with pytest.raises(ValueError):
+        b.submit_sigma([1, 2, 3])
+    assert ok in b.flush(), "good ticket survives the rejected submit"
+
+
+def test_engine_results_are_read_only(store):
+    """Results are shared via cache/dedup fan-out — mutation must fail loudly
+    instead of corrupting another caller's answer."""
+    eng = QueryEngine(store)
+    gains = eng.marginal_gains([1])
+    with pytest.raises(ValueError):
+        gains[0] = 1.0
+    seeds, _ = eng.top_k(2)
+    with pytest.raises(ValueError):
+        seeds[0] = 0
+
+
+def test_cache_invalidates_on_epoch_bump(graph):
+    s = SketchStore(graph, PoolConfig(num_colors=64, max_batches=8,
+                                      master_seed=21))
+    s.ensure(4)
+    cache = ResultCache()
+    b = MicroBatcher(QueryEngine(s), cache=cache)
+    t1 = b.submit_sigma([1, 2, 3]); r1 = b.flush()
+    t2 = b.submit_sigma([3, 2, 1]); r2 = b.flush()
+    assert cache.hits == 1 and b.dispatches == 1, "canonical-key cache hit"
+    old_version = s.version
+    s.refresh(0.5)
+    assert s.version != old_version
+    t3 = b.submit_sigma([1, 2, 3]); r3 = b.flush()
+    assert b.dispatches == 2, "epoch bump must force a recompute"
+    assert cache.hits == 1
+
+
+def test_cache_invalidates_on_pool_growth(store, graph):
+    s = SketchStore(graph, PoolConfig(num_colors=64, max_batches=8,
+                                      master_seed=22))
+    s.ensure(2)
+    cache = ResultCache()
+    b = MicroBatcher(QueryEngine(s), cache=cache)
+    b.submit_sigma([4]); b.flush()
+    s.ensure(4)                       # growth changes the estimator
+    b.submit_sigma([4]); b.flush()
+    assert b.dispatches == 2
+
+
+def test_refresh_replaces_oldest_and_never_reuses_streams(graph):
+    s = SketchStore(graph, PoolConfig(num_colors=64, max_batches=8,
+                                      master_seed=31))
+    s.ensure(4)
+    before = {b.batch_index for b in s.batches}
+    slots = s.refresh(0.5)
+    assert len(slots) == 2 and s.epoch == 1
+    after = [b.batch_index for b in s.batches]
+    assert len(set(after)) == 4
+    for i in slots:
+        assert after[i] not in before, "refresh must use fresh RNG streams"
+        assert s.batch_epochs[i] == 1
+    # Second refresh picks the remaining epoch-0 batches first.
+    slots2 = s.refresh(0.5)
+    assert set(slots2) == set(range(4)) - set(slots)
