@@ -15,7 +15,8 @@ def main() -> None:
     from benchmarks import (bench_work_savings, bench_reorder,
                             bench_fused_vs_unfused, bench_frontier_profile,
                             bench_kernels, bench_imm, bench_scaling,
-                            bench_serve_influence, roofline)
+                            bench_serve_influence, bench_distributed_serve,
+                            roofline)
 
     sections = [
         ("Fig4 work savings / occupancy", lambda: bench_work_savings.run(
@@ -30,6 +31,10 @@ def main() -> None:
         ("IMM end-to-end", lambda: bench_imm.run(theta_cap=2048)),
         ("Online serving: throughput vs pool size",
          lambda: bench_serve_influence.run(n=1000, pool_sizes=(2, 4, 8))),
+        ("Distributed serving: shards × deadline (8 forced CPU devices)",
+         lambda: bench_distributed_serve.run(
+             n=600, batches=8, shard_counts=(1, 4, 8),
+             deadlines_ms=(5, 25), clients=32)),
         ("Fig10/11 device scaling", lambda: bench_scaling.run(
             device_counts=(1, 2, 4, 8))),
         ("Roofline table (from dry-run records)", roofline.table),

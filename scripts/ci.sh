@@ -11,6 +11,12 @@ cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+# Guard: bytecode must never be tracked (PR 1 accidentally committed some).
+if git ls-files | grep -E '(^|/)__pycache__/|\.pyc$'; then
+    echo "[ci] FAIL: tracked __pycache__/.pyc files (see list above)" >&2
+    exit 1
+fi
+
 if python -m pip install -e . ; then
     python -m pytest -x -q
 else

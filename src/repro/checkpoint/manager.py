@@ -41,11 +41,17 @@ def _flatten(tree):
 
 
 def save(directory: str, step: int, tree: Any, *, keep: int = 3,
-         blocking: bool = True) -> threading.Thread | None:
+         blocking: bool = True,
+         extra: Optional[dict] = None) -> threading.Thread | None:
     """Write checkpoint for ``step``.  ``blocking=False`` returns the writer
     thread (async checkpointing: training continues while the host writes;
     the arrays are fetched to host *before* returning so the device buffers
-    are free to be donated)."""
+    are free to be donated).
+
+    ``extra``: JSON-serializable metadata embedded in the manifest (e.g. the
+    shard layout a sharded sketch pool was saved under) — readable without
+    loading any leaf via ``read_manifest``.
+    """
     paths, leaves, _ = _flatten(tree)
     host_leaves = [np.asarray(x) for x in leaves]      # device→host now
 
@@ -53,7 +59,7 @@ def save(directory: str, step: int, tree: Any, *, keep: int = 3,
         final = os.path.join(directory, f"step_{step:08d}")
         tmp = final + ".tmp"
         os.makedirs(tmp, exist_ok=True)
-        manifest = {"step": step, "leaves": []}
+        manifest = {"step": step, "extra": extra or {}, "leaves": []}
         for i, (p, a) in enumerate(zip(paths, host_leaves)):
             fname = f"leaf_{i:05d}.npy"
             np.save(os.path.join(tmp, fname), a)
@@ -91,12 +97,27 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def read_manifest(directory: str, step: Optional[int] = None) -> dict:
+    """Manifest dict (step, extra, per-leaf path/shape/dtype) without
+    touching any leaf file — cheap layout/metadata inspection."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        return json.load(f)
+
+
 def restore(directory: str, target_tree: Any, step: Optional[int] = None,
-            shardings: Any = None) -> tuple[Any, int]:
+            shardings: Any = None, as_numpy: bool = False) -> tuple[Any, int]:
     """Restore into the structure of ``target_tree`` (values ignored).
 
     ``shardings``: optional matching tree of NamedShardings — pass the NEW
     mesh's shardings to perform an elastic reshape on restore.
+    ``as_numpy``: leave unsharded leaves as host numpy arrays instead of
+    transferring them to the default device — for callers that stage
+    placement themselves (e.g. a sharded sketch pool restoring a snapshot
+    bigger than any single device).
     """
     step = step if step is not None else latest_step(directory)
     if step is None:
@@ -121,5 +142,5 @@ def restore(directory: str, target_tree: Any, step: Optional[int] = None,
         if tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(f"{p}: shape {arr.shape} != {tuple(ref.shape)}")
         out.append(jax.device_put(arr, sh) if sh is not None
-                   else jax.numpy.asarray(arr))
+                   else (arr if as_numpy else jax.numpy.asarray(arr)))
     return jax.tree_util.tree_unflatten(treedef, out), step

@@ -134,19 +134,31 @@ def _count_fn(use_kernel: bool):
         bitmask.popcount(vis & act[None, :]), -1).astype(jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
-def _greedy_extend_jit(visited, active, k: int, use_kernel: bool):
+def greedy_extend_program(visited, active, k: int, use_kernel: bool,
+                          all_reduce=None):
     """k rounds of greedy selection as one on-device ``lax.fori_loop``.
 
     Each round computes all-vertex marginal gains with the coverage kernel,
     argmaxes on device, and strips the winner's colors from the active mask —
     no host synchronization until the caller fetches the result.
+
+    ``all_reduce`` merges per-shard partial reductions when the batch dim is
+    sharded (pass ``partial(lax.psum, axis_name=...)`` inside a shard_map;
+    identity on one device).  Because the argmax runs on the *merged* counts
+    — replicated after the collective — every shard selects the same seed
+    with no second collective, and integer summation makes the sharded
+    result bit-identical to the single-device one.
+
+    This is a trace-time program, not a jitted function: single-device
+    callers go through ``greedy_extend``; the distributed query engine
+    (`repro.serve.distributed.engine`) stages it inside a shard_map.
     """
     count = _count_fn(use_kernel)
+    merge = all_reduce if all_reduce is not None else (lambda x: x)
 
     def body(i, carry):
         seeds, act = carry
-        counts = count(visited, act).sum(0)                     # (V,)
+        counts = merge(count(visited, act).sum(0))              # (V,)
         sel = jnp.argmax(counts).astype(jnp.int32)
         seeds = seeds.at[i].set(sel)
         hit = jax.lax.dynamic_index_in_dim(visited, sel, axis=1,
@@ -155,8 +167,13 @@ def _greedy_extend_jit(visited, active, k: int, use_kernel: bool):
 
     seeds0 = jnp.zeros((k,), jnp.int32)
     seeds, active = jax.lax.fori_loop(0, k, body, (seeds0, active))
-    uncovered = jnp.sum(bitmask.popcount(active)).astype(jnp.int32)
+    uncovered = merge(jnp.sum(bitmask.popcount(active)).astype(jnp.int32))
     return seeds, active, uncovered
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
+def _greedy_extend_jit(visited, active, k: int, use_kernel: bool):
+    return greedy_extend_program(visited, active, k, use_kernel)
 
 
 def initial_active(num_batches: int, num_colors: int) -> jnp.ndarray:

@@ -1,0 +1,26 @@
+"""Version-compat wrapper for ``shard_map``.
+
+``jax.shard_map`` (with ``check_vma``) only exists on newer jax; this
+container's jax 0.4.37 ships ``jax.experimental.shard_map.shard_map`` (with
+``check_rep``).  Every shard_map in the repo routes through here so the
+distributed layers run unmodified on both APIs.
+"""
+from __future__ import annotations
+
+try:                                        # jax >= 0.6: public API
+    from jax import shard_map as _shard_map
+    _CHECK_KW = "check_vma"
+except ImportError:                         # jax 0.4.x: experimental API
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """``shard_map`` with replication checking toggled portably.
+
+    ``check=False`` matches the repo's usage: outputs declared replicated
+    (``P()``) are made replicated by an explicit ``psum`` in the body, which
+    the static checker cannot always prove.
+    """
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check})

@@ -157,7 +157,7 @@ def graph_parallel_traversal(ptg: part_lib.PartitionedTiledGraph,
     Returns (visited (V, W), levels).  Tile stacks enter shard_map with their
     leading shard dim consumed by the mesh axis.
     """
-    from jax import shard_map
+    from repro.distributed.compat import shard_map
 
     vp = ptg.padded_vertices
     frontier = tiles.pad_mask_rows(
@@ -177,6 +177,6 @@ def graph_parallel_traversal(ptg: part_lib.PartitionedTiledGraph,
         mesh=mesh,
         in_specs=(tile_specs, P(axis)),
         out_specs=(P(axis), P()),
-        check_vma=False)
+        check=False)
     visited, levels = jax.jit(fn)(ptg, frontier)
     return visited[: ptg.num_vertices], levels

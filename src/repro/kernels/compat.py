@@ -1,0 +1,10 @@
+"""jax version compat for the Pallas TPU kernels.
+
+jax 0.4.x names the compiler-params dataclass ``TPUCompilerParams``; newer
+jax renamed it to ``CompilerParams``.  Resolved once here so every kernel
+runs on both (the shard_map analogue lives in `repro.distributed.compat`).
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                  or pltpu.TPUCompilerParams)

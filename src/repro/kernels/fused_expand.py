@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 from repro.core import rng
 
 
@@ -99,7 +101,7 @@ def fused_expand(tg_prob, tg_eid, tile_src, tile_dst, first_of_dst,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Vp, W), jnp.uint32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),   # sequential: accumulation
     )(tile_src, tile_dst, first_of_dst, scalars,
       tg_prob, tg_eid, frontier, visited)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 from repro.core import rng
 
 
@@ -110,7 +112,7 @@ def fused_expand_q(q8_tiles, tile_src, tile_dst, first_of_dst,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Vp, W), jnp.uint32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
     )(tile_src, tile_dst, first_of_dst, scalars,
       q8_tiles, frontier, visited)

@@ -121,6 +121,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
         mem = compiled.memory_analysis()
         xla_cost = compiled.cost_analysis()
+        if isinstance(xla_cost, (list, tuple)):    # jax 0.4.x: per-program list
+            xla_cost = xla_cost[0] if xla_cost else {}
         text = compiled.as_text()
         cost = hlo_analysis.full_cost(text)      # loop-weighted (exact for
         # scans; XLA's cost_analysis counts while bodies once — see module)
@@ -278,11 +280,12 @@ def lower_bpt_cell(which: str, *, multi_pod: bool) -> dict:
                         (fr_local, jnp.zeros_like(fr_local), jnp.int32(0)))
                     return vis | fr, lvl
 
-                fn = jax.shard_map(
+                from repro.distributed.compat import shard_map
+                fn = shard_map(
                     body, mesh=mesh,
                     in_specs=(P("model"), P("model"), P("model"),
                               P("model")),
-                    out_specs=(P("model"), P()), check_vma=False)
+                    out_specs=(P("model"), P()), check=False)
 
                 def run(q8, ts, td, starts):
                     fr = tiles_lib.pad_mask_rows(

@@ -1,18 +1,29 @@
 """Influence-query serving launcher: sample a sketch pool, serve queries.
 
     python -m repro.launch.serve_influence --smoke
+    python -m repro.launch.serve_influence --smoke --mesh 8x1 --async
 
-Smoke mode exercises the full pool lifecycle on a synthetic graph: sample →
-serve a mixed micro-batched query load (top-k, σ(S), marginal-gain) →
-refresh an epoch → persist → restore bit-identically → cross-check that
-offline ``run_imm`` routed through the shared incremental max-cover kernel
-and the pool reproduces the pool-less seeds exactly.
+Single-device smoke exercises the full pool lifecycle on a synthetic
+graph: sample → serve a mixed micro-batched query load (top-k, σ(S),
+marginal-gain) → refresh an epoch → persist → restore bit-identically →
+cross-check that offline ``run_imm`` routed through the shared incremental
+max-cover kernel and the pool reproduces the pool-less seeds exactly.
+
+``--mesh DxM`` serves from a mesh-sharded pool through the distributed
+engine (slots sharded over the ``data`` axis, one psum per coverage
+reduction).  With ``--smoke`` the launcher forces that many host CPU
+devices — the same trick the multi-device equivalence tests use — so the
+full distributed path smokes on a laptop (explicit ``JAX_PLATFORMS=tpu``
+etc. opts out; without ``--smoke``, real devices are required).
+``--async`` fronts the batcher with the deadline-batched `AsyncFrontEnd`
+and drives it from concurrent client threads.
 """
 from __future__ import annotations
 
 import argparse
 import os
 import tempfile
+import threading
 import time
 
 import numpy as np
@@ -23,19 +34,51 @@ from repro.serve.influence import (MicroBatcher, PoolConfig, QueryEngine,
                                    ResultCache, SketchStore)
 
 
+def _parse_mesh(spec: str) -> tuple[int, int]:
+    try:
+        d, m = (int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh wants DxM (e.g. 8x1), got {spec!r}")
+    return d, m
+
+
+def _force_cpu_host_devices(n: int) -> None:
+    """``--smoke --mesh``: run the distributed path on ``n`` forced host
+    CPU devices (the multi-device test-suite trick), whatever the host has.
+
+    Must run before jax initializes its backend (imports above don't — the
+    backend materializes on the first device query/op).  An explicit
+    accelerator request (``JAX_PLATFORMS=tpu``/``cuda``...) opts out;
+    production runs don't pass ``--smoke`` and use real devices.
+    """
+    if n <= 1 or os.environ.get("JAX_PLATFORMS", "cpu") not in ("", "cpu"):
+        return
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def build_graph(args):
+    return generators.powerlaw_cluster(args.n, args.degree, prob=args.prob,
+                                       seed=args.graph_seed)
+
+
+def build_config(args) -> PoolConfig:
+    """One place maps CLI knobs → PoolConfig for BOTH serving paths."""
+    return PoolConfig(num_colors=args.colors, max_batches=args.max_batches,
+                      memory_budget_mb=args.memory_budget_mb,
+                      master_seed=args.master_seed)
+
+
 def build_store(args) -> SketchStore:
-    g = generators.powerlaw_cluster(args.n, args.degree, prob=args.prob,
-                                    seed=args.graph_seed)
-    cfg = PoolConfig(num_colors=args.colors, max_batches=args.max_batches,
-                     memory_budget_mb=args.memory_budget_mb,
-                     master_seed=args.master_seed)
-    store = SketchStore(g, cfg)
+    store = SketchStore(build_graph(args), build_config(args))
     store.ensure(args.batches)
     return store
 
 
-def serve_mixed_batch(store: SketchStore, engine: QueryEngine,
-                      batcher: MicroBatcher, k: int, num_queries: int):
+def serve_mixed_batch(store, engine, batcher, k: int, num_queries: int):
     """One micro-batched flush mixing all three query kinds."""
     rng = np.random.default_rng(0)
     n = store.graph.num_vertices
@@ -52,26 +95,21 @@ def serve_mixed_batch(store: SketchStore, engine: QueryEngine,
     return tickets, results, dt
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="full lifecycle check on a synthetic graph")
-    ap.add_argument("--n", type=int, default=300)
-    ap.add_argument("--degree", type=float, default=6.0)
-    ap.add_argument("--prob", type=float, default=0.25)
-    ap.add_argument("--graph-seed", type=int, default=7)
-    ap.add_argument("--colors", type=int, default=64)
-    ap.add_argument("--batches", type=int, default=8,
-                    help="initial pool size (fused batches)")
-    ap.add_argument("--max-batches", type=int, default=64)
-    ap.add_argument("--memory-budget-mb", type=float, default=None)
-    ap.add_argument("--master-seed", type=int, default=0)
-    ap.add_argument("--k", type=int, default=4)
-    ap.add_argument("--queries", type=int, default=6)
-    ap.add_argument("--ckpt-dir", default=None,
-                    help="pool snapshot directory (default: temp dir)")
-    args = ap.parse_args()
+def _print_mixed(tag, args, tickets, results, dispatches, dt):
+    seeds, sigma_topk = results[tickets["top_k"][0]]
+    n_served = sum(len(v) for v in tickets.values())
+    print(f"[{tag}] mixed batch: {n_served} queries in "
+          f"{dispatches} dispatches, {dt:.2f}s")
+    print(f"  top-{args.k}: seeds={seeds.tolist()} σ̂={sigma_topk:.1f}")
+    print(f"  σ(S) samples: "
+          f"{[round(float(results[t]), 1) for t in tickets['sigma'][:3]]}")
+    gains = results[tickets["marginal"][0]]
+    print(f"  marginal: best vertex {int(np.argmax(gains))} "
+          f"Δσ̂={float(np.max(gains)):.1f}")
 
+
+# ------------------------------------------------------------ single device
+def run_single(args) -> None:
     t0 = time.time()
     store = build_store(args)
     print(f"[serve_influence] pool: {len(store.batches)} batches × "
@@ -83,18 +121,12 @@ def main():
     batcher = MicroBatcher(engine, cache=ResultCache())
     tickets, results, dt = serve_mixed_batch(store, engine, batcher,
                                              args.k, args.queries)
-    seeds, sigma_topk = results[tickets["top_k"][0]]
-    n_served = sum(len(v) for v in tickets.values())
-    print(f"[serve_influence] mixed batch: {n_served} queries in "
-          f"{batcher.dispatches} dispatches, {dt:.2f}s")
-    print(f"  top-{args.k}: seeds={seeds.tolist()} σ̂={sigma_topk:.1f}")
-    print(f"  σ(S) samples: "
-          f"{[round(float(results[t]), 1) for t in tickets['sigma'][:3]]}")
-    gains = results[tickets["marginal"][0]]
-    print(f"  marginal: best vertex {int(np.argmax(gains))} "
-          f"Δσ̂={float(np.max(gains)):.1f}")
+    _print_mixed("serve_influence", args, tickets, results,
+                 batcher.dispatches, dt)
 
     if not args.smoke:
+        if args.async_frontend:
+            _async_demo(args, engine)
         return
 
     # ---- cached re-serve + epoch refresh invalidation
@@ -104,8 +136,7 @@ def main():
     print(f"[smoke] re-serve: 100% cache hits "
           f"({batcher.cache.hits} hits / {batcher.cache.misses} misses)")
     slots = store.refresh(0.25)
-    _, results2, _ = serve_mixed_batch(store, engine, batcher,
-                                       args.k, args.queries)
+    serve_mixed_batch(store, engine, batcher, args.k, args.queries)
     assert batcher.dispatches > before, "refresh must invalidate cache"
     print(f"[smoke] refresh: epoch {store.epoch}, resampled slots {slots}, "
           f"cache invalidated")
@@ -145,7 +176,158 @@ def main():
     assert np.array_equal(res_plain.seeds, ref_seeds)
     print(f"[smoke] offline run_imm: pool-routed seeds == pool-less seeds "
           f"== host-loop reference ({res_plain.seeds.tolist()})")
+    # Async demo last: its background refresh mutates the store, which
+    # would invalidate the bit-identity assertions above.
+    if args.async_frontend:
+        _async_demo(args, engine)
     print(f"[smoke] PASS in {time.time() - t0:.1f}s")
+
+
+# -------------------------------------------------------------- distributed
+def run_distributed(args, shape: tuple[int, int]) -> None:
+    import jax
+    from repro.serve.distributed import (DistributedQueryEngine,
+                                         ShardedSketchStore)
+
+    t0 = time.time()
+    d, m = shape
+    if jax.device_count() < d * m:
+        raise SystemExit(f"mesh {d}x{m} wants {d * m} devices, have "
+                         f"{jax.device_count()}")
+    mesh = jax.make_mesh((d, m), ("data", "model")) if m > 1 else \
+        jax.make_mesh((d,), ("data",))
+    g = build_graph(args)
+    cfg = build_config(args)
+    store = ShardedSketchStore(g, cfg, mesh)
+    store.ensure(args.batches)
+    print(f"[serve_influence] sharded pool: {len(store.batches)} batches × "
+          f"{store.num_colors} colors over {store.num_shards} shards "
+          f"(axis 'data' of {d}x{m} mesh; "
+          f"{store.bytes_per_batch * store.padded_batches / store.num_shards / 2**20:.2f} "
+          f"MiB/device, capacity {store.capacity} batches)")
+
+    engine = DistributedQueryEngine(store)
+    batcher = MicroBatcher(engine, cache=ResultCache())
+    tickets, results, dt = serve_mixed_batch(store, engine, batcher,
+                                             args.k, args.queries)
+    _print_mixed("distributed", args, tickets, results,
+                 batcher.dispatches, dt)
+
+    if not args.smoke:
+        if args.async_frontend:
+            _async_demo(args, engine)
+        return
+
+    # ---- sharded ≡ single-device, bit for bit
+    single = SketchStore(g, cfg)
+    single.ensure(len(store.batches))
+    ref = QueryEngine(single)
+    s1, sig1 = ref.top_k(args.k)
+    s8, sig8 = engine.top_k(args.k)
+    assert np.array_equal(s1, s8) and sig1 == sig8
+    sets = [[1, 2], [5, 50, 99]]
+    assert np.array_equal(ref.sigma(sets), engine.sigma(sets))
+    print(f"[smoke] sharded == single-device: top-{args.k} seeds "
+          f"{s8.tolist()}, σ̂={sig8:.1f} bit-identical across "
+          f"{store.num_shards} shards")
+
+    # ---- elastic restore under a different mesh shape
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="sharded_pool_")
+    store.save(ckpt)
+    d2 = max(d // 2, 1)
+    mesh2 = jax.make_mesh((d2, (d * m) // d2), ("data", "model"))
+    restored = ShardedSketchStore.restore(ckpt, g, cfg, mesh2)
+    r_seeds, r_sig = DistributedQueryEngine(restored).top_k(args.k)
+    assert np.array_equal(s8, r_seeds) and sig8 == r_sig
+    print(f"[smoke] elastic restore: {store.num_shards} shards → "
+          f"{restored.num_shards} shards, answers bit-identical "
+          f"(layout {ShardedSketchStore.saved_layout(ckpt)['shard_layout']})")
+    # Async demo last: its background refresh mutates the store, which
+    # would invalidate the bit-identity assertions above.
+    if args.async_frontend:
+        _async_demo(args, engine)
+    print(f"[smoke] PASS in {time.time() - t0:.1f}s")
+
+
+# -------------------------------------------------------------------- async
+def _async_demo(args, engine) -> None:
+    """Deadline-batched front-end under a burst of threaded clients."""
+    from repro.serve.distributed import AsyncFrontEnd
+
+    n = engine.store.graph.num_vertices
+    fe = AsyncFrontEnd(MicroBatcher(engine, cache=ResultCache()),
+                       default_deadline=args.deadline,
+                       refresh_every=args.refresh_every)
+    lone = fe.submit_sigma([1, 2, 3])
+    lone.result(timeout=300)
+    assert fe.stats.deadline_flushes >= 1, fe.stats
+
+    futs: list = []
+    lock = threading.Lock()
+    rng = np.random.default_rng(1)
+    queries = [rng.integers(0, n, 3).tolist() for _ in range(4 * 8)]
+
+    def client(q):
+        f = fe.submit_sigma(q)
+        with lock:
+            futs.append(f)
+
+    threads = [threading.Thread(target=client, args=(q,)) for q in queries]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for f in futs:
+        f.result(timeout=300)
+    dt = time.perf_counter() - t0
+    fe.close()
+    assert fe.stats.max_queue_wait <= args.deadline + 2.0, fe.stats
+    print(f"[async] {len(queries)} threaded clients + 1 lone request in "
+          f"{dt:.2f}s: {fe.stats.flushes} flushes "
+          f"({fe.stats.slot_flushes} slot / {fe.stats.deadline_flushes} "
+          f"deadline / {fe.stats.drain_flushes} drain), worst queue wait "
+          f"{fe.stats.max_queue_wait * 1e3:.0f} ms "
+          f"(deadline {args.deadline * 1e3:.0f} ms)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="full lifecycle check on a synthetic graph")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve from a sharded pool on a DxM mesh "
+                         "(forces host devices for CPU smoke)")
+    ap.add_argument("--async", dest="async_frontend", action="store_true",
+                    help="front the batcher with the deadline-batched "
+                         "AsyncFrontEnd and drive it from client threads")
+    ap.add_argument("--deadline", type=float, default=0.05,
+                    help="async flush deadline in seconds")
+    ap.add_argument("--refresh-every", type=float, default=None,
+                    help="async background refresh period in seconds")
+    ap.add_argument("--n", type=int, default=300)
+    ap.add_argument("--degree", type=float, default=6.0)
+    ap.add_argument("--prob", type=float, default=0.25)
+    ap.add_argument("--graph-seed", type=int, default=7)
+    ap.add_argument("--colors", type=int, default=64)
+    ap.add_argument("--batches", type=int, default=8,
+                    help="initial pool size (fused batches)")
+    ap.add_argument("--max-batches", type=int, default=64)
+    ap.add_argument("--memory-budget-mb", type=float, default=None)
+    ap.add_argument("--master-seed", type=int, default=0)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--queries", type=int, default=6)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="pool snapshot directory (default: temp dir)")
+    args = ap.parse_args()
+
+    if args.mesh:
+        shape = _parse_mesh(args.mesh)
+        if args.smoke:
+            _force_cpu_host_devices(shape[0] * shape[1])
+        run_distributed(args, shape)
+    else:
+        run_single(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,170 @@
+"""Distributed influence-query engine: local coverage + one collective.
+
+Same query API as `repro.serve.influence.engine.QueryEngine` (so
+`MicroBatcher` / `AsyncFrontEnd` drive either engine unchanged), but the
+pool's slot dim is sharded over a mesh axis and every program runs under
+``shard_map``:
+
+* each device reduces coverage over **its local batches** with the shared
+  count programs (`kernels.ops.cover_counts` / the popcount fallback);
+* **one ``lax.psum``** merges the per-shard partial counts — the ButterFly
+  BFS lesson: engineer exactly one deliberate collective per reduction;
+* greedy selection (`core.imm.greedy_extend_program`) argmaxes on the
+  *merged, replicated* counts, so every shard picks the same seed with no
+  second collective, and each updates only its local active-mask slice.
+
+All reductions are integer, so the N-shard answer is **bit-identical** to
+the 1-device `QueryEngine` on the same pool — asserted by
+``tests/serve_distributed_check.py``.
+
+``use_kernel`` defaults to the popcount fallback here: the Pallas coverage
+kernel targets TPU lowering and both paths produce identical integer
+counts (asserted by the kernel tests), so on CPU meshes the fallback is
+the conservative choice; pass ``use_kernel=True`` on TPU pods.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import imm
+from repro.distributed import compat
+from repro.serve.distributed import sharded_store as store_lib
+from repro.serve.influence import engine as engine_lib
+
+
+class DistributedQueryEngine:
+    """Static-shape shard_map query programs bound to one sharded store."""
+
+    def __init__(self, store: store_lib.ShardedSketchStore, *,
+                 query_slots: int = 8, max_seeds: int = 8,
+                 use_kernel: bool = False):
+        self.store = store
+        self.query_slots = query_slots
+        self.max_seeds = max_seeds
+        self.use_kernel = use_kernel
+        self._greedy_fns: dict[int, object] = {}
+        self._sigma_fn = None
+        self._marginal_fn = None
+
+    @property
+    def _n(self) -> int:
+        return self.store.graph.num_vertices
+
+    @property
+    def _theta(self) -> int:
+        return self.store.num_samples
+
+    def _psum(self):
+        return functools.partial(jax.lax.psum, axis_name=self.store.axis)
+
+    # ------------------------------------------------------ sharded state
+    def _initial_active(self) -> jnp.ndarray:
+        """(Bp, W) all-uncovered mask, pad slots zeroed, sharded P(axis).
+
+        Zeroing pad rows keeps them out of every popcount: a pad slot has a
+        zero visited mask AND a zero active mask, so it adds nothing to
+        gain counts or to the uncovered total.
+        """
+        bp = self.store.padded_batches
+        act = imm.initial_active(bp, self.store.num_colors)
+        valid = (jnp.arange(bp) < len(self.store.batches))[:, None]
+        act = jnp.where(valid, act, jnp.uint32(0))
+        return jax.device_put(
+            act, NamedSharding(self.store.mesh, P(self.store.axis)))
+
+    # ----------------------------------------------------------- programs
+    def _greedy(self, k: int):
+        """jit(shard_map) greedy program for a fixed k (cached)."""
+        fn = self._greedy_fns.get(k)
+        if fn is None:
+            axis, use_kernel = self.store.axis, self.use_kernel
+            psum = self._psum()
+
+            def body(vis, act):
+                return imm.greedy_extend_program(vis, act, k, use_kernel,
+                                                 all_reduce=psum)
+
+            fn = jax.jit(compat.shard_map(
+                body, self.store.mesh,
+                in_specs=(P(axis), P(axis)),
+                out_specs=(P(), P(axis), P())))
+            self._greedy_fns[k] = fn
+        return fn
+
+    def _sigma(self):
+        if self._sigma_fn is None:
+            axis, nc = self.store.axis, self.store.num_colors
+            psum = self._psum()
+
+            def body(vis, seeds, mask):
+                return engine_lib.sigma_counts_program(vis, seeds, mask, nc,
+                                                       all_reduce=psum)
+
+            self._sigma_fn = jax.jit(compat.shard_map(
+                body, self.store.mesh,
+                in_specs=(P(axis), P(), P()), out_specs=P()))
+        return self._sigma_fn
+
+    def _marginal(self):
+        if self._marginal_fn is None:
+            axis, nc = self.store.axis, self.store.num_colors
+            use_kernel, psum = self.use_kernel, self._psum()
+
+            def body(vis, seeds, mask):
+                return engine_lib.marginal_counts_program(
+                    vis, seeds, mask, nc, use_kernel, all_reduce=psum)
+
+            self._marginal_fn = jax.jit(compat.shard_map(
+                body, self.store.mesh,
+                in_specs=(P(axis), P(), P()), out_specs=P()))
+        return self._marginal_fn
+
+    # -------------------------------------------------------------- top-k
+    def top_k(self, k: int) -> tuple[np.ndarray, float]:
+        """Greedy seed selection over the sharded pool: one program, one
+        psum per greedy round."""
+        seeds, _, uncovered = self._greedy(k)(self.store.visited_stack(),
+                                              self._initial_active())
+        theta = self._theta
+        cov = (theta - int(uncovered)) / theta
+        return engine_lib._frozen(np.asarray(seeds)), cov * self._n
+
+    # --------------------------------------------------------------- σ(S)
+    def sigma_padded(self, seeds: jnp.ndarray,
+                     mask: jnp.ndarray) -> np.ndarray:
+        counts = self._sigma()(self.store.visited_stack(), seeds, mask)
+        return engine_lib._frozen(
+            np.asarray(counts, np.float64) * self._n / self._theta)
+
+    def sigma(self, seed_sets) -> np.ndarray:
+        seeds, mask = engine_lib.pad_queries(seed_sets, self.query_slots,
+                                             self.max_seeds)
+        return self.sigma_padded(seeds, mask)[:len(seed_sets)]
+
+    # ----------------------------------------------------- marginal gains
+    def marginal_padded(self, excl_seeds: jnp.ndarray,
+                        excl_mask: jnp.ndarray) -> np.ndarray:
+        counts = self._marginal()(self.store.visited_stack(), excl_seeds,
+                                  excl_mask)
+        return engine_lib._frozen(
+            np.asarray(counts, np.float64) * self._n / self._theta)
+
+    def marginal_gains(self, exclude) -> np.ndarray:
+        seeds, mask = engine_lib.pad_queries([exclude], self.query_slots,
+                                             self.max_seeds)
+        return self.marginal_padded(seeds, mask)[0]
+
+    def best_extension(self, exclude, num: int = 1) -> np.ndarray:
+        """Resume greedy selection after ``exclude`` — exact marginal-gain
+        argmax through the same one-collective greedy program."""
+        visited = self.store.visited_stack()
+        active = self._initial_active()
+        for s in exclude:
+            active = active & ~visited[:, int(s), :]
+        seeds, _, _ = self._greedy(num)(visited, active)
+        return np.asarray(seeds)

@@ -1,0 +1,185 @@
+"""Mesh-sharded RRR sketch pool: each device owns a disjoint slice of slots.
+
+`ShardedSketchStore` extends the single-device `SketchStore` with a device
+*placement* policy — nothing about sampling changes.  Slot ``i`` always
+holds the batch drawn at the store's i-th stream allocation (the same
+``next_batch_index`` bookkeeping as the base class), so a 1-device pool and
+an N-device pool are **bit-identical per slot**; the mesh only decides
+which device materializes slot ``i``.  That invariant is what makes the
+distributed query engine's answers bit-for-bit equal to single-device ones.
+
+Layout: the stacked ``(B, V, W)`` mask is zero-padded to a multiple of the
+mesh axis size and placed with ``NamedSharding(mesh, P(axis))`` — shard
+``s`` owns the contiguous slot block ``[s·Bp/S, (s+1)·Bp/S)``.  Pad slots
+are all-zero masks; the query engine zeroes their active-mask rows so they
+contribute nothing to any reduction.
+
+Budget: ``PoolConfig.memory_budget_mb`` is **per shard** here — an N-shard
+pool admits N× the batches of a 1-device pool under the same per-device
+budget, which is the point of sharding.  To make that true on a real pod,
+the pool never materializes on one device: each sampled mask is staged to
+host memory, and ``visited_stack`` assembles the sharded stack from
+per-device blocks (`jax.make_array_from_single_device_arrays`), so device
+residency is exactly one slot block per shard.  Sampling itself runs one
+batch at a time on the default device (a (V, W) transient, 1/B of the
+pool); distributing the *sampling* across shards is a later step (see
+ROADMAP).
+
+Persistence: snapshots are written through the same manifest format as the
+base class, with the shard layout recorded in the manifest's ``extra``
+metadata.  Because leaves are *global* (slot-ordered) arrays, a snapshot
+saved under one mesh shape restores under any other — restore simply
+re-slots batches onto the new mesh's contiguous blocks.  A plain
+`SketchStore` can restore a sharded snapshot (and vice versa); the formats
+are identical up to ``extra``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import manager
+from repro.core import rrr
+from repro.graph import csr
+from repro.serve.influence.sketch_store import PoolConfig, SketchStore
+
+
+def _host_batch(b: rrr.RRRBatch) -> rrr.RRRBatch:
+    """Stage a batch's mask to host memory (no-op if already there)."""
+    return dataclasses.replace(b, visited=np.asarray(b.visited))
+
+
+class ShardedSketchStore(SketchStore):
+    """Epoch-tagged sketch pool with slots sharded over one mesh axis."""
+
+    # Restored masks stay on host (see base class) — device residency is
+    # only the per-shard blocks assembled by ``visited_stack``.
+    _mask_array = staticmethod(np.asarray)
+
+    def __init__(self, g: csr.Graph, config: PoolConfig = PoolConfig(),
+                 mesh: Mesh | None = None, *, axis: str = "data",
+                 g_rev: csr.Graph | None = None):
+        if mesh is None:
+            raise ValueError("ShardedSketchStore needs a mesh; use "
+                             "SketchStore for single-device pools")
+        if axis not in mesh.axis_names:
+            raise ValueError(f"axis {axis!r} not in mesh {mesh.axis_names}")
+        super().__init__(g, config, g_rev=g_rev)
+        self.mesh = mesh
+        self.axis = axis
+
+    # ------------------------------------------------------------- layout
+    @property
+    def num_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    @property
+    def capacity(self) -> int:
+        """Per-shard memory budget × shard count (≥ 1, like the base)."""
+        cap = self.config.max_batches
+        if self.config.memory_budget_mb is not None:
+            per_shard = int(self.config.memory_budget_mb * 2 ** 20
+                            // self.bytes_per_batch)
+            cap = min(cap, per_shard * self.num_shards)
+        return max(cap, 1)
+
+    @property
+    def padded_batches(self) -> int:
+        """Slot count rounded up to a multiple of the shard count."""
+        s = self.num_shards
+        return -(-len(self.batches) // s) * s
+
+    def shard_layout(self) -> list[int]:
+        """slot → owning shard (contiguous blocks over the padded slots)."""
+        per = self.padded_batches // self.num_shards
+        return [i // per for i in range(len(self.batches))]
+
+    # ----------------------------------------------------------- sampling
+    def _sample(self) -> rrr.RRRBatch:
+        # Stage each mask to host: persistent device residency must be
+        # only the sharded stack (one slot block per shard), or the
+        # sampling device would accumulate the whole pool and void the
+        # per-shard budget.
+        return _host_batch(super()._sample())
+
+    # -------------------------------------------------------------- stack
+    def visited_stack(self) -> jnp.ndarray:
+        """(Bp, V, W) stack, zero-padded to ``padded_batches`` and sharded
+        ``P(axis)`` over the slot dim (cached per store version).
+
+        Assembled from per-device blocks — each device receives exactly its
+        own slot block, so the full stack never materializes on any single
+        device.  (Single-process meshes only for now; a multi-host pod
+        would filter to addressable devices.)
+
+        Offline IMM slices a prefix of this (``[:want]``); slicing a
+        sharded array is fine — XLA re-gathers as needed.
+        """
+        if not self.batches:
+            raise ValueError("empty pool — call ensure() first")
+        if self._stack is None:
+            bp, per = self.padded_batches, self.padded_batches // self.num_shards
+            v, w = np.asarray(self.batches[0].visited).shape
+            shape = (bp, v, w)
+            sharding = NamedSharding(self.mesh, P(self.axis))
+            blocks: dict[int, np.ndarray] = {}
+
+            def block(lo: int) -> np.ndarray:
+                if lo not in blocks:
+                    rows = [np.asarray(b.visited)
+                            for b in self.batches[lo:lo + per]]
+                    rows += [np.zeros((v, w), rows[0].dtype
+                                      if rows else np.uint32)
+                             ] * (per - len(rows))
+                    blocks[lo] = np.stack(rows)
+                return blocks[lo]
+
+            arrays = [
+                jax.device_put(block(idx[0].start or 0), dev)
+                for dev, idx in sharding.devices_indices_map(shape).items()]
+            self._stack = jax.make_array_from_single_device_arrays(
+                shape, sharding, arrays)
+        return self._stack
+
+    # -------------------------------------------------------- persistence
+    def save(self, directory: str, *, keep: int = 3) -> None:
+        """Manifest snapshot with the shard layout recorded in ``extra``."""
+        manager.save(directory, self.epoch, self._tree(), keep=keep,
+                     extra={"kind": "sharded_sketch_pool",
+                            "mesh_axis": self.axis,
+                            "num_shards": self.num_shards,
+                            "shard_layout": self.shard_layout()})
+
+    @staticmethod
+    def saved_layout(directory: str, step: int | None = None) -> dict:
+        """The ``extra`` metadata a snapshot was written under (empty dict
+        for snapshots from a plain `SketchStore`)."""
+        return manager.read_manifest(directory, step).get("extra", {})
+
+    @classmethod
+    def restore(cls, directory: str, g: csr.Graph,
+                config: PoolConfig = PoolConfig(),
+                mesh: Mesh | None = None, *, axis: str = "data",
+                step: int | None = None,
+                g_rev: csr.Graph | None = None) -> "ShardedSketchStore":
+        """Rebuild a bit-identical pool, re-slotted onto ``mesh``.
+
+        The new mesh may have any shape — the snapshot's slot-ordered
+        global arrays are simply re-sliced into the new axis's contiguous
+        blocks (the recorded layout of the *saving* mesh is metadata, not a
+        constraint).  Masks load straight from disk to host
+        (``_restored_fields`` with host placement), so restore never
+        transits the pool through a single device.
+        """
+        config, epoch, nbi, batches, epochs = cls._restored_fields(
+            directory, config, step)
+        store = cls(g, config, mesh, axis=axis, g_rev=g_rev)
+        store.epoch = epoch
+        store.next_batch_index = nbi
+        store.batches = batches
+        store.batch_epochs = epochs
+        return store

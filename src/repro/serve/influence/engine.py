@@ -19,8 +19,6 @@ mix triggers recompilation.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -62,25 +60,41 @@ def _union_rows(visited, seeds, mask):
     return jax.lax.reduce(rows, jnp.uint32(0), jax.lax.bitwise_or, (2,))
 
 
-@functools.partial(jax.jit, static_argnames=("num_colors",))
-def _sigma_counts(visited, seeds, mask, num_colors: int):
-    """Covered-color counts per query slot: (Q,) int32."""
+def sigma_counts_program(visited, seeds, mask, num_colors: int,
+                         all_reduce=None):
+    """Covered-color counts per query slot: (Q,) int32.
+
+    Trace-time program (callers jit).  ``all_reduce`` merges per-shard
+    partial counts when the batch dim is sharded — one collective per flush,
+    bit-identical to single-device because the reduction is integer.
+    """
     tail = jnp.asarray(bitmask.color_tail_mask(num_colors))
     covered = _union_rows(visited, seeds, mask) & tail[None, None, :]
-    return jnp.sum(bitmask.popcount(covered), axis=(0, 2)).astype(jnp.int32)
+    counts = jnp.sum(bitmask.popcount(covered), axis=(0, 2)).astype(jnp.int32)
+    return all_reduce(counts) if all_reduce is not None else counts
 
 
-@functools.partial(jax.jit, static_argnames=("num_colors", "use_kernel"))
-def _marginal_counts(visited, excl_seeds, excl_mask, num_colors: int,
-                     use_kernel: bool):
-    """Per-vertex marginal-gain counts per exclusion slot: (Q, V) int32."""
+def marginal_counts_program(visited, excl_seeds, excl_mask, num_colors: int,
+                            use_kernel: bool, all_reduce=None):
+    """Per-vertex marginal-gain counts per exclusion slot: (Q, V) int32.
+
+    Trace-time program (callers jit); ``all_reduce`` as in
+    ``sigma_counts_program``.
+    """
     tail = jnp.asarray(bitmask.color_tail_mask(num_colors))
     active = tail[None, None, :] & ~_union_rows(visited, excl_seeds,
                                                 excl_mask)     # (B, Q, W)
     count = (ops.cover_counts_batched if use_kernel
              else imm._count_fn(False))
-    return jax.lax.map(lambda act: count(visited, act).sum(0),
-                       jnp.swapaxes(active, 0, 1))             # (Q, V)
+    counts = jax.lax.map(lambda act: count(visited, act).sum(0),
+                         jnp.swapaxes(active, 0, 1))           # (Q, V)
+    return all_reduce(counts) if all_reduce is not None else counts
+
+
+_sigma_counts = jax.jit(sigma_counts_program,
+                        static_argnames=("num_colors",))
+_marginal_counts = jax.jit(marginal_counts_program,
+                           static_argnames=("num_colors", "use_kernel"))
 
 
 class QueryEngine:

@@ -20,9 +20,7 @@ bit-identical pool (uint32 masks round-trip exactly through ``.npy``).
 from __future__ import annotations
 
 import dataclasses
-import json
 import math
-import os
 from typing import Any
 
 import jax.numpy as jnp
@@ -49,6 +47,11 @@ class PoolConfig:
 
 class SketchStore:
     """Epoch-tagged, budgeted, persistable pool of RRR sketch batches."""
+
+    # Where a restored mask lives.  The sharded subclass stages masks to
+    # host (its device residency is the assembled per-shard stack, so a
+    # restore must never transit the whole pool through one device).
+    _mask_array = staticmethod(jnp.asarray)
 
     def __init__(self, g: csr.Graph, config: PoolConfig = PoolConfig(), *,
                  g_rev: csr.Graph | None = None):
@@ -168,35 +171,47 @@ class SketchStore:
         manager.save(directory, self.epoch, self._tree(), keep=keep)
 
     @classmethod
-    def restore(cls, directory: str, g: csr.Graph,
-                config: PoolConfig = PoolConfig(), *,
-                step: int | None = None,
-                g_rev: csr.Graph | None = None) -> "SketchStore":
-        """Rebuild a bit-identical pool from the latest (or given) snapshot."""
+    def _restored_fields(cls, directory: str, config: PoolConfig,
+                         step: int | None):
+        """(config, epoch, next_batch_index, batches, batch_epochs) of a
+        snapshot.  Leaves load as host numpy; each mask is placed via
+        ``cls._mask_array``, so the whole pool never transits one device
+        unless the subclass wants it to."""
         step = step if step is not None else manager.latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no sketch-pool snapshot in {directory}")
-        d = os.path.join(directory, f"step_{step:08d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+        manifest = manager.read_manifest(directory, step)
         target = {e["path"]: np.zeros(e["shape"], manager._np_dtype(e["dtype"]))
                   for e in manifest["leaves"]}
-        tree, _ = manager.restore(directory, target, step)
+        tree, _ = manager.restore(directory, target, step, as_numpy=True)
         counters = np.asarray(tree["counters"])
         if int(counters[3]) != config.num_colors:
             raise ValueError(f"snapshot colors {int(counters[3])} != "
                              f"config {config.num_colors}")
         config = dataclasses.replace(config, master_seed=int(counters[2]))
-        store = cls(g, config, g_rev=g_rev)
-        store.epoch = int(counters[0])
-        store.next_batch_index = int(counters[1])
         visited = np.asarray(tree["visited"])
         roots = np.asarray(tree["roots"])
         indices = np.asarray(tree["batch_indices"])
         visits = np.asarray(tree["edge_visits"])
-        store.batches = [
-            rrr.RRRBatch(jnp.asarray(visited[i]), roots[i], int(indices[i]),
-                         int(visits[i, 0]), int(visits[i, 1]))
+        batches = [
+            rrr.RRRBatch(cls._mask_array(visited[i]), roots[i],
+                         int(indices[i]), int(visits[i, 0]),
+                         int(visits[i, 1]))
             for i in range(visited.shape[0])]
-        store.batch_epochs = [int(e) for e in np.asarray(tree["batch_epochs"])]
+        epochs = [int(e) for e in np.asarray(tree["batch_epochs"])]
+        return config, int(counters[0]), int(counters[1]), batches, epochs
+
+    @classmethod
+    def restore(cls, directory: str, g: csr.Graph,
+                config: PoolConfig = PoolConfig(), *,
+                step: int | None = None,
+                g_rev: csr.Graph | None = None) -> "SketchStore":
+        """Rebuild a bit-identical pool from the latest (or given) snapshot."""
+        config, epoch, nbi, batches, epochs = cls._restored_fields(
+            directory, config, step)
+        store = cls(g, config, g_rev=g_rev)
+        store.epoch = epoch
+        store.next_batch_index = nbi
+        store.batches = batches
+        store.batch_epochs = epochs
         return store

@@ -1,0 +1,153 @@
+"""Distributed-serving equivalence checks, executed by
+tests/test_serve_distributed.py in a subprocess with 8 forced host devices
+(the main pytest process keeps its 1-device invariant — see conftest.py).
+Prints "OK <name>" per passing check; any exception fails.
+
+The contract under test: an N-shard pool + DistributedQueryEngine is
+**bit-for-bit** equal to the 1-device SketchStore + QueryEngine path —
+same top-k seeds, same σ(S), same marginal gains — because sampling is
+per-slot deterministic and every distributed reduction is an integer psum.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import tempfile                 # noqa: E402
+import threading                # noqa: E402
+import time                     # noqa: E402
+
+import numpy as np              # noqa: E402
+import jax                      # noqa: E402
+
+from repro.graph import generators                          # noqa: E402
+from repro.serve.influence import (MicroBatcher, PoolConfig,    # noqa: E402
+                                   QueryEngine, ResultCache, SketchStore)
+from repro.serve.distributed import (AsyncFrontEnd,             # noqa: E402
+                                     DistributedQueryEngine,
+                                     ShardedSketchStore)
+
+
+def main():
+    # Watchdog: if anything ever wedges (thread deadlock, lost wakeup),
+    # die with a full all-thread stack dump well inside the driving
+    # test's 900 s subprocess timeout instead of hanging silently.
+    import faulthandler
+    faulthandler.dump_traceback_later(600, exit=True)
+
+    assert len(jax.devices()) == 8, jax.devices()
+    g = generators.powerlaw_cluster(200, 6.0, prob=0.25, seed=13)
+    cfg = PoolConfig(num_colors=64, max_batches=32, master_seed=3)
+
+    # ---- per-slot bit identity: mesh only decides placement ---------------
+    single = SketchStore(g, cfg)
+    single.ensure(8)
+    mesh8 = jax.make_mesh((8,), ("data",))
+    sharded = ShardedSketchStore(g, cfg, mesh8)
+    sharded.ensure(8)
+    assert sharded.num_shards == 8
+    for a, b in zip(single.batches, sharded.batches):
+        assert a.batch_index == b.batch_index
+        np.testing.assert_array_equal(np.asarray(a.visited),
+                                      np.asarray(b.visited))
+    print("OK shard_slots")
+
+    # ---- engine equivalence: top-k / σ(S) / marginal bit-identical --------
+    e1, e8 = QueryEngine(single), DistributedQueryEngine(sharded)
+    s1, sig1 = e1.top_k(4)
+    s8, sig8 = e8.top_k(4)
+    np.testing.assert_array_equal(s1, s8)
+    assert sig1 == sig8
+    sets = [[0], [3, 50, 99], [10, 20, 30, 40]]
+    np.testing.assert_array_equal(e1.sigma(sets), e8.sigma(sets))
+    excl = [int(s1[0]), int(s1[1])]
+    np.testing.assert_array_equal(e1.marginal_gains(excl),
+                                  e8.marginal_gains(excl))
+    np.testing.assert_array_equal(e1.best_extension(excl, 2),
+                                  e8.best_extension(excl, 2))
+    print("OK engine_equivalence")
+
+    # ---- ragged slot count: 5 batches on 8 shards (zero-pad slots) --------
+    s5 = SketchStore(g, cfg)
+    s5.ensure(5)
+    sh5 = ShardedSketchStore(g, cfg, mesh8)
+    sh5.ensure(5)
+    assert sh5.padded_batches == 8 and len(sh5.batches) == 5
+    a1 = QueryEngine(s5).top_k(3)
+    a8 = DistributedQueryEngine(sh5).top_k(3)
+    np.testing.assert_array_equal(a1[0], a8[0])
+    assert a1[1] == a8[1]
+    print("OK ragged_shards")
+
+    # ---- per-shard budget: N shards admit N× the per-device batches -------
+    tight = PoolConfig(num_colors=64, max_batches=64, master_seed=3,
+                       memory_budget_mb=2 * sharded.bytes_per_batch / 2**20)
+    assert SketchStore(g, tight).capacity == 2
+    assert ShardedSketchStore(g, tight, mesh8).capacity == 16
+    print("OK per_shard_budget")
+
+    # ---- elastic manifest restore: 8 shards → 2 shards → 1 device ---------
+    with tempfile.TemporaryDirectory() as d:
+        sharded.save(d)
+        extra = ShardedSketchStore.saved_layout(d)
+        assert extra["num_shards"] == 8
+        assert extra["shard_layout"] == list(range(8))
+        mesh2 = jax.make_mesh((2, 4), ("data", "model"))
+        r2 = ShardedSketchStore.restore(d, g, cfg, mesh2)
+        assert r2.num_shards == 2 and r2.shard_layout() == [0] * 4 + [1] * 4
+        s2, sig2 = DistributedQueryEngine(r2).top_k(4)
+        np.testing.assert_array_equal(s1, s2)
+        assert sig1 == sig2
+        rp = SketchStore.restore(d, g, cfg)     # plain 1-device restore
+        sp, sigp = QueryEngine(rp).top_k(4)
+        np.testing.assert_array_equal(s1, sp)
+        assert sig1 == sigp
+    print("OK elastic_restore")
+
+    # ---- async front-end: deadline flush, concurrency, refresh ------------
+    deadline = 0.2
+    engine = DistributedQueryEngine(sharded)
+    engine.sigma([[0]])     # compile before the deadline clock matters
+    fe = AsyncFrontEnd(MicroBatcher(engine, cache=ResultCache()),
+                       default_deadline=deadline, flush_slots=8,
+                       refresh_every=1.5)
+    # a lone request must flush at its deadline, not wait for a full slot
+    lone = fe.submit_sigma([3, 50, 99])
+    v = lone.result(timeout=30)
+    assert v == engine.sigma([[3, 50, 99]])[0]
+    assert fe.stats.deadline_flushes >= 1, fe.stats
+    # concurrent callers from many threads, correct fan-out
+    futs, expect = [], {}
+    lock = threading.Lock()
+
+    def client(i):
+        q = [i % 50, (i * 7) % 50 + 50]
+        f = fe.submit_sigma(q)
+        with lock:
+            futs.append((f, tuple(q)))
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(24)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for f, q in futs:
+        got = f.result(timeout=30)
+        assert got == engine.sigma([list(q)])[0], q
+    # no request waited past its deadline (dispatch-start vs submit time);
+    # generous epsilon for CPU scheduling jitter
+    assert fe.stats.max_queue_wait <= deadline + 0.25, fe.stats
+    time.sleep(2.0)                       # let the background refresh fire
+    fe.close()
+    assert fe.stats.refreshes >= 1, fe.stats
+    # refresh bumped the epoch → old answers recompute under the new pool
+    assert engine.store.epoch >= 1
+    # close() joined the worker: the version must now hold still across a
+    # full refresh period
+    ver_after_close = engine.store.version
+    time.sleep(1.6)
+    assert engine.store.version == ver_after_close
+    print("OK async_frontend")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,237 @@
+"""Drives tests/serve_distributed_check.py in a subprocess with 8 forced
+host devices (keeps the main process's 1-device invariant; see conftest.py),
+plus in-process deadline/thread-safety tests for the async front-end over a
+single-device engine (no mesh needed)."""
+import os
+import pathlib
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.serve.influence import (MicroBatcher, PoolConfig, QueryEngine,
+                                   ResultCache, SketchStore)
+from repro.serve.distributed import AsyncFrontEnd
+
+_SCRIPT = pathlib.Path(__file__).parent / "serve_distributed_check.py"
+_SRC = str(pathlib.Path(__file__).parents[1] / "src")
+
+
+@pytest.mark.slow
+def test_sharded_serving_equivalence():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, str(_SCRIPT)],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    for marker in ("OK shard_slots", "OK engine_equivalence",
+                   "OK ragged_shards", "OK per_shard_budget",
+                   "OK elastic_restore", "OK async_frontend"):
+        assert marker in proc.stdout, proc.stdout
+
+
+# ---------------------------------------------------- in-process front-end
+@pytest.fixture(scope="module")
+def engine():
+    from repro.graph import generators
+    g = generators.powerlaw_cluster(150, 5.0, prob=0.25, seed=17)
+    s = SketchStore(g, PoolConfig(num_colors=64, max_batches=8,
+                                  master_seed=9))
+    s.ensure(4)
+    return QueryEngine(s)
+
+
+def test_frontend_lone_request_flushes_at_deadline(engine):
+    """A lone request must be dispatched by its deadline, not wait for the
+    slot batch to fill (the pre-PR MicroBatcher starvation bug)."""
+    with AsyncFrontEnd(MicroBatcher(engine), default_deadline=0.1,
+                       flush_slots=64) as fe:
+        fut = fe.submit_sigma([1, 2, 3], deadline=0.1)
+        got = fut.result(timeout=30)
+    assert got == engine.sigma([[1, 2, 3]])[0]
+    assert fe.stats.deadline_flushes >= 1
+    assert fe.stats.slot_flushes == 0
+
+
+def test_frontend_full_slot_flushes_early(engine):
+    """flush_slots pending queries dispatch immediately — well before the
+    (deliberately huge) deadline."""
+    with AsyncFrontEnd(MicroBatcher(engine), default_deadline=60.0,
+                       flush_slots=4) as fe:
+        t0 = time.monotonic()
+        futs = [fe.submit_sigma([i]) for i in range(4)]
+        for f in futs:
+            f.result(timeout=30)
+        assert time.monotonic() - t0 < 30.0
+    assert fe.stats.slot_flushes >= 1
+
+
+def test_frontend_concurrent_submitters_get_own_answers(engine):
+    sets = [[i, i + 7] for i in range(12)]
+    futs = {}
+    with AsyncFrontEnd(MicroBatcher(engine, cache=ResultCache()),
+                       default_deadline=0.05) as fe:
+        def client(i):
+            futs[i] = fe.submit_sigma(sets[i])
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(len(sets))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        got = {i: futs[i].result(timeout=30) for i in futs}
+    want = engine.sigma(sets[:8]).tolist() + engine.sigma(sets[8:]).tolist()
+    assert [got[i] for i in range(len(sets))] == pytest.approx(want)
+
+
+def test_frontend_invalid_submit_fails_caller_only(engine):
+    with AsyncFrontEnd(MicroBatcher(engine), default_deadline=0.05) as fe:
+        ok = fe.submit_sigma([1, 2])
+        with pytest.raises(ValueError):
+            fe.submit_sigma(list(range(engine.max_seeds + 1)))
+        assert ok.result(timeout=30) == engine.sigma([[1, 2]])[0]
+
+
+def test_frontend_close_drains_and_rejects(engine):
+    fe = AsyncFrontEnd(MicroBatcher(engine), default_deadline=30.0)
+    fut = fe.submit_sigma([5])
+    fe.close()
+    assert fut.result(timeout=5) == engine.sigma([[5]])[0]
+    with pytest.raises(RuntimeError):
+        fe.submit_sigma([6])
+
+
+def test_frontend_background_refresh_bumps_version(engine):
+    store = engine.store
+    before = store.version
+    with AsyncFrontEnd(MicroBatcher(engine, cache=ResultCache()),
+                       default_deadline=0.02, refresh_every=0.2) as fe:
+        deadline = time.monotonic() + 30
+        while fe.stats.refreshes == 0 and time.monotonic() < deadline:
+            time.sleep(0.05)
+        # queries keep being answered across the epoch bump
+        val = fe.submit_sigma([2, 4]).result(timeout=30)
+    assert fe.stats.refreshes >= 1
+    assert store.version != before
+    assert val == engine.sigma([[2, 4]])[0]
+
+
+class _FlakyEngine:
+    """Wraps a real engine; the first σ dispatch raises."""
+    def __init__(self, inner):
+        self.inner = inner
+        self.query_slots = inner.query_slots
+        self.max_seeds = inner.max_seeds
+        self.fail_next = True
+
+    @property
+    def store(self):
+        return self.inner.store
+
+    def top_k(self, k):
+        return self.inner.top_k(k)
+
+    def sigma(self, seed_sets):
+        if self.fail_next:
+            self.fail_next = False
+            raise RuntimeError("boom")
+        return self.inner.sigma(seed_sets)
+
+
+def test_batcher_flush_error_names_consumed_tickets(engine):
+    from repro.serve.influence import FlushError
+    b = MicroBatcher(_FlakyEngine(engine))
+    t1, t2 = b.submit_sigma([1]), b.submit_sigma([2])
+    with pytest.raises(FlushError) as ei:
+        b.flush()
+    assert set(ei.value.tickets) == {t1, t2}
+    b.submit_sigma([3])               # later submit untouched, still queued
+    assert b.pending_count == 1
+
+
+def test_batcher_flush_error_keeps_partial_results(engine):
+    """A σ dispatch failure must not discard the top-k answer computed
+    earlier in the same flush."""
+    from repro.serve.influence import FlushError
+    b = MicroBatcher(_FlakyEngine(engine))
+    t_top = b.submit_top_k(2)
+    t_sig = b.submit_sigma([1])
+    with pytest.raises(FlushError) as ei:
+        b.flush()
+    assert set(ei.value.tickets) == {t_sig}
+    seeds, sigma = ei.value.partial[t_top]
+    ref_seeds, ref_sigma = engine.top_k(2)
+    assert (seeds == ref_seeds).all() and sigma == ref_sigma
+
+
+def test_frontend_cancelled_future_does_not_kill_dispatcher(engine):
+    """A client cancelling its queued future must not crash the dispatcher
+    thread (futures are resolved via set_running_or_notify_cancel)."""
+    with AsyncFrontEnd(MicroBatcher(engine), default_deadline=0.2) as fe:
+        doomed = fe.submit_sigma([1])
+        assert doomed.cancel()
+        ok = fe.submit_sigma([2])
+        assert ok.result(timeout=30) == engine.sigma([[2]])[0]
+
+
+def test_frontend_flush_error_fails_only_consumed_callers(engine):
+    """A broken dispatch fails the callers it consumed; the front-end keeps
+    serving and later submits succeed."""
+    from repro.serve.influence import FlushError
+    with AsyncFrontEnd(MicroBatcher(_FlakyEngine(engine)),
+                       default_deadline=0.05) as fe:
+        bad = fe.submit_sigma([1])
+        with pytest.raises(FlushError):
+            bad.result(timeout=30)
+        good = fe.submit_sigma([2])
+        assert good.result(timeout=30) == engine.sigma([[2]])[0]
+
+
+# ------------------------------------------------------ batcher deadlines
+def test_batcher_deadline_bookkeeping(engine):
+    b = MicroBatcher(engine)
+    assert b.oldest_deadline() is None and b.pending_count == 0
+    t0 = time.monotonic()
+    b.submit_sigma([1], deadline=5.0)
+    b.submit_sigma([2], deadline=1.0)
+    b.submit_top_k(3)                       # no deadline
+    assert b.pending_count == 3
+    oldest = b.oldest_deadline()
+    assert oldest is not None and 0.5 < oldest - t0 < 1.5
+    b.flush()
+    assert b.pending_count == 0 and b.oldest_deadline() is None
+
+
+def test_batcher_threaded_submit_flush(engine):
+    """Hammer submits from many threads against concurrent flushes; every
+    ticket must be answered exactly once with its own query's answer."""
+    b = MicroBatcher(engine, cache=ResultCache())
+    results, lock = {}, threading.Lock()
+
+    def submitter(base):
+        tickets = [(b.submit_sigma([base, base + 3]), base) for _ in range(5)]
+        with lock:
+            results.update({t: base for t, base in tickets})
+
+    def flusher():
+        for _ in range(10):
+            out = b.flush()
+            with lock:
+                flushed.update(out)
+            time.sleep(0.005)
+
+    flushed = {}
+    threads = ([threading.Thread(target=submitter, args=(i,))
+                for i in range(8)]
+               + [threading.Thread(target=flusher) for _ in range(2)])
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    flushed.update(b.flush())               # drain stragglers
+    assert set(flushed) == set(results), "every ticket answered exactly once"
+    for ticket, base in results.items():
+        assert flushed[ticket] == engine.sigma([[base, base + 3]])[0]

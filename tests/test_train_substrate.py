@@ -60,9 +60,10 @@ def test_compressed_psum_matches_exact_within_quantization():
         return mean, res
 
     from jax.sharding import PartitionSpec as P
-    mean, res = jax.jit(jax.shard_map(
+    from repro.distributed.compat import shard_map
+    mean, res = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(P(),), out_specs=(P(), P()),
-        check_vma=False))(g)
+        check=False))(g)
     np.testing.assert_allclose(np.asarray(mean["w"] + res["w"]),
                                np.asarray(g["w"]), atol=1e-6)
     # error feedback residual is bounded by half a quantization level
