@@ -1,0 +1,134 @@
+"""Pool build throughput: sampler backend × shard count → batches/sec.
+
+Sweeps the unified Sampler API's backends over a sketch-pool build on a
+forced 8-device CPU host mesh (the multi-device test-suite trick):
+
+* ``dense``          — one batch at a time on the default device (the
+                       pre-refactor `SketchStore` path);
+* ``data_parallel``  — whole batch blocks via shard_map, each shard
+                       traversing its own contiguous slot slice, swept over
+                       shard counts.
+
+Each cell builds the SAME pool (bit-identical per slot — asserted) so the
+rows measure pure build mechanics.  Shard counts on one CPU share silicon,
+so CPU speedups are modest; the trajectory on a real pod is the point.
+
+Runs in a **subprocess** so the forced device count never leaks into the
+parent.  Emits the standard ``BENCH_<name>.json`` shape::
+
+    {"bench": ..., "schema": 1, "unix_time": ..., "env": {...},
+     "params": {...}, "rows": [{...}, ...]}
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+_DEVICES = 8
+
+
+# ------------------------------------------------------------------ worker
+def _worker(args: dict) -> None:
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               f" --xla_force_host_platform_device_count={_DEVICES}").strip()
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro import sampling
+    from repro.graph import generators
+    from repro.serve.distributed import ShardedSketchStore
+    from repro.serve.influence import PoolConfig, SketchStore
+
+    g = generators.powerlaw_cluster(args["n"], args["deg"],
+                                    prob=(0.0, 0.25), seed=11)
+
+    def build(backend: str, shards: int):
+        spec = sampling.SamplerSpec(diffusion=args["diffusion"],
+                                    backend=backend,
+                                    num_colors=args["colors"], master_seed=7)
+        cfg = PoolConfig(max_batches=args["batches"], spec=spec)
+        if backend == "data_parallel":
+            mesh = Mesh(np.array(jax.devices()[:shards]), ("data",))
+            store = ShardedSketchStore(g, cfg, mesh)
+        else:
+            store = SketchStore(g, cfg)
+        store.ensure(1)                          # compile outside the timing
+        t0 = time.perf_counter()
+        store.ensure(args["batches"])
+        build_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        store.refresh(0.5)
+        refresh_s = time.perf_counter() - t0
+        return store, build_s, refresh_s
+
+    ref_store = None
+    for backend, shards in [("dense", 1)] + [("data_parallel", s)
+                                             for s in args["shard_counts"]]:
+        store, build_s, refresh_s = build(backend, shards)
+        if ref_store is None:
+            ref_store = store        # the measured dense row IS the reference
+        for a, b in zip(ref_store.batches, store.batches):   # bit identity
+            np.testing.assert_array_equal(np.asarray(a.visited),
+                                          np.asarray(b.visited))
+        built = args["batches"] - 1              # ensure(1) pre-built one
+        row = {
+            "backend": backend,
+            "shards": shards,
+            "batches": args["batches"],
+            "colors": args["colors"],
+            "build_s": round(build_s, 3),
+            "batches_per_s": round(built / max(build_s, 1e-9), 2),
+            "refresh_s": round(refresh_s, 3),
+        }
+        print("ROW " + json.dumps(row), flush=True)
+    print("ENV " + json.dumps({"backend": jax.default_backend(),
+                               "devices": _DEVICES,
+                               "jax": jax.__version__}), flush=True)
+
+
+# ------------------------------------------------------------------ driver
+def run(n=600, deg=8.0, colors=64, batches=8, shard_counts=(1, 4, 8),
+        diffusion="ic", out=print, json_path="BENCH_pool_build.json"):
+    params = {"n": n, "deg": deg, "colors": colors, "batches": batches,
+              "shard_counts": list(shard_counts), "diffusion": diffusion}
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), json.dumps(params)],
+        capture_output=True, text=True, env=env, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"worker failed:\n{proc.stdout}\n{proc.stderr}")
+    rows, bench_env = [], {}
+    for line in proc.stdout.splitlines():
+        if line.startswith("ROW "):
+            rows.append(json.loads(line[4:]))
+        elif line.startswith("ENV "):
+            bench_env = json.loads(line[4:])
+
+    out("# pool build: backend,shards,batches,build_s,batches_per_s,refresh_s")
+    for r in rows:
+        out(",".join(str(r[k]) for k in
+                     ("backend", "shards", "batches", "build_s",
+                      "batches_per_s", "refresh_s")))
+
+    record = {"bench": "pool_build", "schema": 1,
+              "unix_time": int(time.time()), "env": bench_env,
+              "params": params, "rows": rows}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=1)
+        out(f"# wrote {json_path} ({len(rows)} rows)")
+    return record
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1:                   # worker mode: params as argv[1]
+        _worker(json.loads(sys.argv[1]))
+    else:
+        run()

@@ -16,7 +16,7 @@ def main() -> None:
                             bench_fused_vs_unfused, bench_frontier_profile,
                             bench_kernels, bench_imm, bench_scaling,
                             bench_serve_influence, bench_distributed_serve,
-                            roofline)
+                            bench_pool_build, roofline)
 
     sections = [
         ("Fig4 work savings / occupancy", lambda: bench_work_savings.run(
@@ -35,6 +35,9 @@ def main() -> None:
          lambda: bench_distributed_serve.run(
              n=600, batches=8, shard_counts=(1, 4, 8),
              deadlines_ms=(5, 25), clients=32)),
+        ("Pool build: sampler backend × shards (8 forced CPU devices)",
+         lambda: bench_pool_build.run(n=600, batches=8,
+                                      shard_counts=(1, 4, 8))),
         ("Fig10/11 device scaling", lambda: bench_scaling.run(
             device_counts=(1, 2, 4, 8))),
         ("Roofline table (from dry-run records)", roofline.table),

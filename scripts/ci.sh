@@ -17,6 +17,18 @@ if git ls-files | grep -E '(^|/)__pycache__/|\.pyc$'; then
     exit 1
 fi
 
+# Guard: all RRR sampling must route through the repro.sampling facade —
+# rrr.sample_batch is its private primitive.  Only its definition (in
+# core/rrr.py) and calls inside src/repro/sampling/ are allowed; tests may
+# still use it as a low-level oracle.
+if grep -rn "sample_batch(" src benchmarks examples --include='*.py' \
+        | grep -v '^src/repro/sampling/' \
+        | grep -v 'def sample_batch('; then
+    echo "[ci] FAIL: rrr.sample_batch called outside repro/sampling/" \
+         "(see list above) — go through repro.sampling.make_sampler" >&2
+    exit 1
+fi
+
 if python -m pip install -e . ; then
     python -m pytest -x -q
 else

@@ -45,7 +45,10 @@ class SamplingDriver:
     def __init__(self, g_rev: csr.Graph, num_colors: int, master_seed: int,
                  *, num_workers: int = 4, timeout_s: float = 120.0,
                  max_attempts: int = 5, failure_rate: float = 0.0,
-                 slow_rate: float = 0.0, slow_s: float = 0.3, **sample_kw):
+                 slow_rate: float = 0.0, slow_s: float = 0.3,
+                 spec=None, **sample_kw):
+        from repro import sampling
+
         self.g_rev = g_rev
         self.num_colors = num_colors
         self.master_seed = master_seed
@@ -55,7 +58,21 @@ class SamplingDriver:
         self.failure_rate = failure_rate
         self.slow_rate = slow_rate
         self.slow_s = slow_s
-        self.sample_kw = sample_kw
+        # Shared reconciliation policy: the driver's num_colors/master_seed
+        # are required args, hence always explicit — a disagreeing spec
+        # raises rather than silently overriding.
+        self.spec = sampling.resolve_spec(spec, sample_kw,
+                                          num_colors=num_colors,
+                                          master_seed=master_seed)
+        if self.spec.backend == "data_parallel":
+            raise ValueError(
+                "SamplingDriver parallelizes across worker threads, not a "
+                "mesh — use a dense/tiled/kernel spec here, or build the "
+                "pool through ShardedSketchStore for mesh-parallel sampling")
+        # Workers are threads sharing one stateless sampler: sampling is a
+        # pure function of (graph, master_seed, batch_index), so concurrent
+        # (and speculative duplicate) calls are race-free by construction.
+        self.sampler = sampling.make_sampler(None, self.spec, g_rev=g_rev)
         self.stats = DriverStats()
         self._lock = threading.Lock()
 
@@ -73,9 +90,7 @@ class SamplingDriver:
 
     def _work(self, batch_index: int, attempt: int) -> rrr.RRRBatch:
         self._inject(batch_index, attempt)
-        return rrr.sample_batch(self.g_rev, self.num_colors,
-                                self.master_seed, batch_index,
-                                **self.sample_kw)
+        return self.sampler.sample(batch_index)
 
     def run(self, n_batches: int) -> list[rrr.RRRBatch]:
         """Sample ``n_batches`` with reissue-on-failure and speculative

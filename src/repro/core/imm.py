@@ -56,20 +56,31 @@ def theta_bound(n: int, k: int, eps: float, ell: float = 1.0) -> int:
 
 
 def estimate_theta(g: csr.Graph, k: int, eps: float, ell: float = 1.0,
-                   num_colors: int = 64, master_seed: int = 0,
+                   num_colors: int | None = None,
+                   master_seed: int | None = None,
                    max_batches_per_phase: int = 64,
                    g_rev: csr.Graph | None = None,
-                   pool=None) -> tuple[int, list]:
+                   pool=None, spec=None, mesh=None,
+                   sampler=None) -> tuple[int, list]:
     """IMM sampling phase: iterative-halving lower bound on OPT → θ.
 
     Returns (θ, batches generated so far) — generated batches are *reused*
     by the selection phase (IMM's trick to avoid resampling).
 
-    ``g_rev``: prebuilt transpose(g); computed here only when absent so one
-    reversal serves both the halving phase and the selection top-up.
+    ``g_rev``: prebuilt transpose(g); handed to the sampler so one reversal
+    serves both the halving phase and the selection top-up.
     ``pool``: optional sketch pool (see module docstring); when given, the
-    pool owns sampling and this function never transposes the graph itself.
+    pool owns sampling and this function never builds a sampler itself.
+    ``spec``/``mesh``: `repro.sampling.SamplerSpec` + mesh for the pool-less
+    path (``sampling.resolve_spec`` policy: explicit num_colors/master_seed
+    that disagree with the spec raise); ``sampler``: prebuilt
+    `repro.sampling.Sampler` (overrides spec).
     """
+    from repro import sampling
+
+    spec = sampling.resolve_spec(spec, num_colors=num_colors,
+                                 master_seed=master_seed)
+    num_colors, master_seed = spec.num_colors, spec.master_seed
     n = g.num_vertices
     ell = ell * (1 + math.log(2) / math.log(n))
     eps_prime = math.sqrt(2) * eps
@@ -77,16 +88,16 @@ def estimate_theta(g: csr.Graph, k: int, eps: float, ell: float = 1.0,
                  * (_log_comb(n, k) + ell * math.log(n)
                     + math.log(math.log2(max(n, 4))))
                  * n / eps_prime ** 2)
-    if pool is None and g_rev is None:
-        g_rev = csr.transpose(g)
+    if pool is None and sampler is None:
+        sampler = sampling.make_sampler(g, spec, mesh=mesh, g_rev=g_rev)
     batches: list[rrr.RRRBatch] = []
 
     def grow(want: int) -> list[rrr.RRRBatch]:
         if pool is not None:
             return _pool_take(pool, want)
-        while len(batches) < want:
-            batches.append(rrr.sample_batch(g_rev, num_colors, master_seed,
-                                            len(batches)))
+        if len(batches) < want:
+            batches.extend(
+                sampler.sample_many(range(len(batches), want)))
         return batches
 
     lb = 1.0
@@ -250,9 +261,9 @@ class IMMResult:
 
 
 def run_imm(g: csr.Graph, k: int, eps: float = 0.3, *, ell: float = 1.0,
-            num_colors: int = 64, master_seed: int = 0,
+            num_colors: int | None = None, master_seed: int | None = None,
             theta_cap: int | None = 100_000, pool=None,
-            **sample_kw) -> IMMResult:
+            spec=None, mesh=None, **sample_kw) -> IMMResult:
     """Full IMM: θ estimation → top-up sampling → greedy selection.
 
     ``pool``: optional sketch pool (module docstring); batches come from and
@@ -263,12 +274,31 @@ def run_imm(g: csr.Graph, k: int, eps: float = 0.3, *, ell: float = 1.0,
     selection always uses the first ``⌈θ/colors⌉`` pool slots, so a larger
     pre-populated pool still respects ``theta_cap``.  A pool whose capacity
     cannot supply θ raises rather than silently weakening the bound.
+
+    ``spec``: `repro.sampling.SamplerSpec` choosing diffusion/backend for
+    the pool-less path (``sampling.resolve_spec`` policy: explicit
+    num_colors/master_seed that disagree with the spec raise); ``mesh``
+    backs the ``data_parallel`` backend.  Legacy ``sample_batch`` kwargs
+    are converted with a DeprecationWarning.
     """
-    if pool is not None and pool.num_colors != num_colors:
-        raise ValueError(f"pool colors {pool.num_colors} != {num_colors}")
-    g_rev = csr.transpose(g) if pool is None else None
-    theta, batches = estimate_theta(g, k, eps, ell, num_colors, master_seed,
-                                    g_rev=g_rev, pool=pool)
+    from repro import sampling
+
+    explicit_spec = spec is not None
+    spec = sampling.resolve_spec(spec, sample_kw, num_colors=num_colors,
+                                 master_seed=master_seed)
+    num_colors, master_seed = spec.num_colors, spec.master_seed
+    if pool is not None:
+        if explicit_spec and getattr(pool, "spec", None) is not None \
+                and pool.spec.diffusion != spec.diffusion:
+            raise ValueError(f"pool diffusion {pool.spec.diffusion!r} != "
+                             f"requested {spec.diffusion!r}")
+        if pool.num_colors != num_colors:
+            raise ValueError(f"pool colors {pool.num_colors} != {num_colors}")
+    sampler = None
+    if pool is None:
+        sampler = sampling.make_sampler(g, spec, mesh=mesh)
+    theta, batches = estimate_theta(g, k, eps, ell, spec=spec,
+                                    pool=pool, sampler=sampler)
     if theta_cap:
         theta = min(theta, theta_cap)
     want = -(-theta // num_colors)
@@ -276,17 +306,24 @@ def run_imm(g: csr.Graph, k: int, eps: float = 0.3, *, ell: float = 1.0,
         batches = _pool_take(pool, want)
         visited = pool.visited_stack()[:want]
     else:
-        while len(batches) < want:
-            batches.append(rrr.sample_batch(g_rev, num_colors, master_seed,
-                                            len(batches), **sample_kw))
+        if len(batches) < want:
+            batches.extend(sampler.sample_many(range(len(batches), want)))
+        # Selection uses exactly ⌈θ/colors⌉ batches even when the halving
+        # phase oversampled — mirrors the pool path's [:want] slice, so
+        # pool-routed and pool-less runs agree for every diffusion.
+        batches = batches[:want]
         visited = rrr.stack_visited(batches)
     seeds, cov = greedy_max_cover(visited, k, num_colors)
     return IMMResult(
         seeds=seeds, sigma_estimate=cov * g.num_vertices,
         theta=len(batches) * num_colors, coverage=cov,
         num_batches=len(batches),
-        fused_edge_visits=sum(b.fused_edge_visits for b in batches),
-        unfused_edge_visits=sum(b.unfused_edge_visits for b in batches))
+        # Skip the -1 "not instrumented" sentinels (tiled/kernel/LT/
+        # data_parallel batches) so sums never go negative.
+        fused_edge_visits=sum(b.fused_edge_visits for b in batches
+                              if b.fused_edge_visits >= 0),
+        unfused_edge_visits=sum(b.unfused_edge_visits for b in batches
+                                if b.unfused_edge_visits >= 0))
 
 
 def simulate_influence(g: csr.Graph, seeds, num_trials: int = 512,

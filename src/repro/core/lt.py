@@ -13,6 +13,13 @@ selection for c.
 Unlike IC there is no per-level redraw: selections are fixed per traversal
 (the live-edge subgraph is sampled once), which the hash structure encodes
 by excluding ``level`` from the counters.
+
+Split for distribution (repro.sampling's ``data_parallel`` backend): the
+per-graph CDF prefix sums precompute on host ONCE (``selection_cum_before``)
+while the per-seed selection (``selection_mask_from_cb``) and the level loop
+(``lt_traversal_program``) are pure traceable jnp — so a shard_map body can
+draw each shard's batches with its own RNG streams, bit-identical to the
+single-device path.
 """
 from __future__ import annotations
 
@@ -31,6 +38,7 @@ def normalize_lt_weights(g: csr.Graph) -> csr.Graph:
     """Scale each vertex's IN-edge weights to sum ≤ 1 (LT requirement).
 
     Incoming weight mass w(v,u) = prob(v,u) / max(1, Σ_in prob(·,u)).
+    Idempotent: an already-normalized graph has Σ_in ≤ 1 ⇒ scale 1.
     """
     e = g.num_edges
     dst = np.asarray(g.dst)[:e]
@@ -43,22 +51,15 @@ def normalize_lt_weights(g: csr.Graph) -> csr.Graph:
                           g.num_vertices, pad_to=g.padded_edges)
 
 
-def _selection_mask(g: csr.Graph, num_colors: int, seed) -> jnp.ndarray:
-    """(E_pad, W) uint32: bit c of edge e set iff e is dst[e]'s live edge
-    for color c.  Inverse-CDF over each vertex's in-edge list: edge e is
-    selected for color c iff  cum_before[e] ≤ u(dst,c) < cum_before[e]+p[e]
-    where u ~ U[0,1) per (dst, color) — at most one edge wins, and the
-    no-edge case (u ≥ Σp) selects nothing, all per the LT live-edge rule.
-    """
+def selection_cum_before(g: csr.Graph) -> np.ndarray:
+    """(E_pad,) float32: Σ of in-edge probabilities *before* each edge in
+    its destination's CDF (host-side precompute — needs concrete arrays).
+
+    Per-graph, seed-independent: compute once, reuse across every batch."""
     e_pad = g.padded_edges
     e = g.num_edges
-    dst = g.dst
-    prob = g.prob.astype(jnp.float32)
-
-    # prefix sums of in-edge probability per destination, in dst-sorted
-    # order (host-side precompute keeps the jit side gather-only).
-    dst_np = np.asarray(dst)[:e]
-    prob_np = np.asarray(prob)[:e].astype(np.float64)
+    dst_np = np.asarray(g.dst)[:e]
+    prob_np = np.asarray(g.prob)[:e].astype(np.float64)
     order = np.argsort(dst_np, kind="stable")
     sorted_prob = prob_np[order]
     sorted_dst = dst_np[order]
@@ -68,8 +69,22 @@ def _selection_mask(g: csr.Graph, num_colors: int, seed) -> jnp.ndarray:
     cum_before_sorted = prefix - prefix[group_start]  # per-dst prefix
     cum_before = np.zeros(e_pad, np.float32)
     cum_before[order] = cum_before_sorted.astype(np.float32)
-    cb = jnp.asarray(cum_before)
+    return cum_before
 
+
+def selection_mask_from_cb(g: csr.Graph, cb: jnp.ndarray, num_colors: int,
+                           seed) -> jnp.ndarray:
+    """(E_pad, W) uint32: bit c of edge e set iff e is dst[e]'s live edge
+    for color c.  Inverse-CDF over each vertex's in-edge list: edge e is
+    selected for color c iff  cum_before[e] ≤ u(dst,c) < cum_before[e]+p[e]
+    where u ~ U[0,1) per (dst, color) — at most one edge wins, and the
+    no-edge case (u ≥ Σp) selects nothing, all per the LT live-edge rule.
+
+    Pure jnp given the host-precomputed ``cb`` — traceable (jit/shard_map).
+    """
+    dst = g.dst
+    prob = g.prob.astype(jnp.float32)
+    seed = jnp.asarray(seed, jnp.uint32)
     words = []
     for w in range(bitmask.num_words(num_colors)):
         lanes = []
@@ -86,20 +101,16 @@ def _selection_mask(g: csr.Graph, num_colors: int, seed) -> jnp.ndarray:
     return jnp.stack(words, -1)
 
 
-def run_fused_lt(g: csr.Graph, starts, num_colors: int, seed,
-                 max_levels: int = 64):
-    """Fused LT traversal: visited (V, W) — column c = LT RRR set c.
-
-    The live-edge selection mask precomputes on host (CDF prefix sums need
-    concrete arrays); the level loop is jitted."""
-    seed = jnp.uint32(seed)
-    sel = _selection_mask(g, num_colors, seed)         # (E, W)
-    return _run_fused_lt_jit(g, sel, starts, num_colors, max_levels)
+def _selection_mask(g: csr.Graph, num_colors: int, seed) -> jnp.ndarray:
+    """Host-precompute + selection in one call (single-device convenience)."""
+    return selection_mask_from_cb(g, jnp.asarray(selection_cum_before(g)),
+                                  num_colors, seed)
 
 
-@partial(jax.jit, static_argnames=("num_colors", "max_levels"))
-def _run_fused_lt_jit(g: csr.Graph, sel, starts, num_colors: int,
-                      max_levels: int):
+def lt_traversal_program(g: csr.Graph, sel, starts, num_colors: int,
+                         max_levels: int):
+    """Level loop over a fixed live-edge selection — trace-time program
+    (callers jit or stage inside shard_map).  Returns visited (V, W)."""
     frontier = init_frontier(g.num_vertices, num_colors, starts)
     visited = jnp.zeros_like(frontier)
 
@@ -118,3 +129,21 @@ def _run_fused_lt_jit(g: csr.Graph, sel, starts, num_colors: int,
     fr, vis, _ = jax.lax.while_loop(cond, body,
                                     (frontier, visited, jnp.int32(0)))
     return vis | fr
+
+
+def run_fused_lt(g: csr.Graph, starts, num_colors: int, seed,
+                 max_levels: int = 64):
+    """Fused LT traversal: visited (V, W) — column c = LT RRR set c.
+
+    The live-edge selection mask precomputes on host (CDF prefix sums need
+    concrete arrays); selection + level loop are jitted."""
+    seed = jnp.uint32(seed)
+    cb = jnp.asarray(selection_cum_before(g))
+    return _run_fused_lt_jit(g, cb, starts, seed, num_colors, max_levels)
+
+
+@partial(jax.jit, static_argnames=("num_colors", "max_levels"))
+def _run_fused_lt_jit(g: csr.Graph, cb, starts, seed, num_colors: int,
+                      max_levels: int):
+    sel = selection_mask_from_cb(g, cb, num_colors, seed)
+    return lt_traversal_program(g, sel, starts, num_colors, max_levels)

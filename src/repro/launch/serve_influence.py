@@ -1,7 +1,15 @@
 """Influence-query serving launcher: sample a sketch pool, serve queries.
 
     python -m repro.launch.serve_influence --smoke
+    python -m repro.launch.serve_influence --smoke --diffusion lt
+    python -m repro.launch.serve_influence --smoke --sampler-backend kernel
     python -m repro.launch.serve_influence --smoke --mesh 8x1 --async
+
+``--diffusion ic|lt`` and ``--sampler-backend dense|tiled|kernel|
+data_parallel`` select the `repro.sampling.SamplerSpec` the pool samples
+under (backend defaults: ``dense`` single-device, ``data_parallel`` on a
+mesh — the shard_map path that builds every shard's slots on that shard's
+own devices).
 
 Single-device smoke exercises the full pool lifecycle on a synthetic
 graph: sample → serve a mixed micro-batched query load (top-k, σ(S),
@@ -21,6 +29,7 @@ and drives it from concurrent client threads.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import tempfile
 import threading
@@ -29,7 +38,8 @@ import time
 import numpy as np
 
 from repro.core import imm
-from repro.graph import generators
+from repro.graph import csr, generators
+from repro.sampling import SamplerSpec
 from repro.serve.influence import (MicroBatcher, PoolConfig, QueryEngine,
                                    ResultCache, SketchStore)
 
@@ -61,15 +71,32 @@ def _force_cpu_host_devices(n: int) -> None:
 
 
 def build_graph(args):
-    return generators.powerlaw_cluster(args.n, args.degree, prob=args.prob,
-                                       seed=args.graph_seed)
+    g = generators.powerlaw_cluster(args.n, args.degree, prob=args.prob,
+                                    seed=args.graph_seed)
+    # Dedupe unconditionally: the block-sparse tile layout needs parallel
+    # edges merged, and using ONE edge list for every backend keeps the
+    # facade's cross-backend bit-identity contract — the same CLI args
+    # must sample the same bits whether the backend is dense or kernel
+    # (a pool saved under one must refresh identically under another).
+    e = g.num_edges
+    return csr.from_edges(np.asarray(g.src)[:e], np.asarray(g.dst)[:e],
+                          np.asarray(g.prob)[:e], g.num_vertices,
+                          dedupe=True)
 
 
-def build_config(args) -> PoolConfig:
-    """One place maps CLI knobs → PoolConfig for BOTH serving paths."""
-    return PoolConfig(num_colors=args.colors, max_batches=args.max_batches,
-                      memory_budget_mb=args.memory_budget_mb,
-                      master_seed=args.master_seed)
+def build_config(args, *, backend: str | None = None) -> PoolConfig:
+    """One place maps CLI knobs → PoolConfig (with its `SamplerSpec`) for
+    BOTH serving paths."""
+    backend = backend or args.sampler_backend or "dense"
+    spec = SamplerSpec(diffusion=args.diffusion, backend=backend,
+                       num_colors=args.colors, master_seed=args.master_seed)
+    return PoolConfig(max_batches=args.max_batches,
+                      memory_budget_mb=args.memory_budget_mb, spec=spec)
+
+
+def dense_variant(cfg: PoolConfig) -> PoolConfig:
+    """Same pool under the single-device dense backend (reference path)."""
+    return dataclasses.replace(cfg, spec=cfg.spec.replace(backend="dense"))
 
 
 def build_store(args) -> SketchStore:
@@ -111,11 +138,15 @@ def _print_mixed(tag, args, tickets, results, dispatches, dt):
 # ------------------------------------------------------------ single device
 def run_single(args) -> None:
     t0 = time.time()
+    if args.sampler_backend == "data_parallel":
+        raise SystemExit("--sampler-backend data_parallel needs a mesh; "
+                         "add --mesh DxM")
     store = build_store(args)
     print(f"[serve_influence] pool: {len(store.batches)} batches × "
           f"{store.num_colors} colors = {store.num_samples} RRR sets "
           f"({store.bytes_per_batch * len(store.batches) / 2**20:.2f} MiB, "
-          f"capacity {store.capacity} batches)")
+          f"capacity {store.capacity} batches; diffusion "
+          f"{store.spec.diffusion!r}, backend {store.spec.backend!r})")
 
     engine = QueryEngine(store)
     batcher = MicroBatcher(engine, cache=ResultCache())
@@ -144,9 +175,7 @@ def run_single(args) -> None:
     # ---- persist + bit-identical restore
     ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="sketch_pool_")
     store.save(ckpt)
-    restored = SketchStore.restore(ckpt, store.graph,
-                                   PoolConfig(num_colors=args.colors,
-                                              max_batches=args.max_batches))
+    restored = SketchStore.restore(ckpt, store.graph, build_config(args))
     assert np.array_equal(np.asarray(store.visited_stack()),
                           np.asarray(restored.visited_stack()))
     assert restored.epoch == store.epoch
@@ -161,14 +190,11 @@ def run_single(args) -> None:
 
     # ---- offline IMM through the shared incremental kernel + pool
     g = store.graph
-    res_plain = imm.run_imm(g, k=args.k, eps=0.5, num_colors=args.colors,
-                            master_seed=args.master_seed, theta_cap=1024)
-    fresh = SketchStore(g, PoolConfig(num_colors=args.colors,
-                                      max_batches=args.max_batches,
-                                      master_seed=args.master_seed))
-    res_pool = imm.run_imm(g, k=args.k, eps=0.5, num_colors=args.colors,
-                           master_seed=args.master_seed, theta_cap=1024,
-                           pool=fresh)
+    res_plain = imm.run_imm(g, k=args.k, eps=0.5, spec=store.spec,
+                            theta_cap=1024)
+    fresh = SketchStore(g, build_config(args))
+    res_pool = imm.run_imm(g, k=args.k, eps=0.5, spec=store.spec,
+                           theta_cap=1024, pool=fresh)
     assert np.array_equal(res_plain.seeds, res_pool.seeds)
     assert res_plain.coverage == res_pool.coverage
     ref_seeds, ref_cov = imm.greedy_max_cover_ref(
@@ -197,14 +223,18 @@ def run_distributed(args, shape: tuple[int, int]) -> None:
     mesh = jax.make_mesh((d, m), ("data", "model")) if m > 1 else \
         jax.make_mesh((d,), ("data",))
     g = build_graph(args)
-    cfg = build_config(args)
+    # On a mesh the sampler defaults to data_parallel: ensure()/refresh()
+    # traverse whole batch blocks via shard_map, each shard's slots built
+    # on that shard's own devices.
+    cfg = build_config(args, backend=args.sampler_backend or "data_parallel")
     store = ShardedSketchStore(g, cfg, mesh)
     store.ensure(args.batches)
     print(f"[serve_influence] sharded pool: {len(store.batches)} batches × "
           f"{store.num_colors} colors over {store.num_shards} shards "
           f"(axis 'data' of {d}x{m} mesh; "
           f"{store.bytes_per_batch * store.padded_batches / store.num_shards / 2**20:.2f} "
-          f"MiB/device, capacity {store.capacity} batches)")
+          f"MiB/device, capacity {store.capacity} batches; diffusion "
+          f"{store.spec.diffusion!r}, backend {store.spec.backend!r})")
 
     engine = DistributedQueryEngine(store)
     batcher = MicroBatcher(engine, cache=ResultCache())
@@ -218,8 +248,9 @@ def run_distributed(args, shape: tuple[int, int]) -> None:
             _async_demo(args, engine)
         return
 
-    # ---- sharded ≡ single-device, bit for bit
-    single = SketchStore(g, cfg)
+    # ---- sharded ≡ single-device, bit for bit (and, with the default
+    # data_parallel backend, shard_map block builds ≡ dense per-batch)
+    single = SketchStore(g, dense_variant(cfg))
     single.ensure(len(store.batches))
     ref = QueryEngine(single)
     s1, sig1 = ref.top_k(args.k)
@@ -242,6 +273,19 @@ def run_distributed(args, shape: tuple[int, int]) -> None:
     print(f"[smoke] elastic restore: {store.num_shards} shards → "
           f"{restored.num_shards} shards, answers bit-identical "
           f"(layout {ShardedSketchStore.saved_layout(ckpt)['shard_layout']})")
+
+    # ---- epoch refresh: block resample ≡ dense per-batch resample
+    t_r = time.perf_counter()
+    slots_sharded = store.refresh(0.5)
+    dt_r = time.perf_counter() - t_r
+    slots_single = single.refresh(0.5)
+    assert slots_sharded == slots_single
+    rs, rsig = engine.top_k(args.k)
+    r1, rsig1 = ref.top_k(args.k)
+    assert np.array_equal(rs, r1) and rsig == rsig1
+    print(f"[smoke] refresh: {len(slots_sharded)} slots resampled via "
+          f"{store.spec.backend!r} in {dt_r:.2f}s, still bit-identical to "
+          "the dense single-device pool")
     # Async demo last: its background refresh mutates the store, which
     # would invalidate the bit-identity assertions above.
     if args.async_frontend:
@@ -305,6 +349,12 @@ def main():
                     help="async flush deadline in seconds")
     ap.add_argument("--refresh-every", type=float, default=None,
                     help="async background refresh period in seconds")
+    ap.add_argument("--diffusion", choices=("ic", "lt"), default="ic",
+                    help="diffusion model the pool samples under")
+    ap.add_argument("--sampler-backend", default=None,
+                    choices=("dense", "tiled", "kernel", "data_parallel"),
+                    help="traversal backend (default: dense single-device, "
+                         "data_parallel on a mesh)")
     ap.add_argument("--n", type=int, default=300)
     ap.add_argument("--degree", type=float, default=6.0)
     ap.add_argument("--prob", type=float, default=0.25)

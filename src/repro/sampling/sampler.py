@@ -1,0 +1,258 @@
+"""The unified `Sampler` facade — one traversal-spec entry point over every
+(diffusion × backend) combination.
+
+All backends honor one RNG contract, owned here: batch ``b`` under
+``master_seed`` draws its roots from ``rrr.batch_starts`` and its counter
+seed from ``rrr.batch_seed``, so a given ``(master_seed, batch_index)`` is
+**bit-identical across every backend that supports the diffusion** — dense,
+tiled, Pallas-kernel and shard_map data-parallel runs all reproduce the
+same ``(V, W)`` visited mask.  That invariant is what lets a sketch pool be
+built under one backend, extended under another, and served from any mesh
+shape without changing a single answer.
+
+Backends:
+
+* ``dense``          — CSR edge-centric sweep (`core.traversal.run_fused` /
+                       `core.lt.run_fused_lt`), one batch per call on the
+                       default device.
+* ``tiled``          — block-sparse tile expansion, pure-jnp oracle
+                       (`core.tiled_traversal.run_fused_tiled`).  IC only.
+* ``kernel``         — same tile layout through the Pallas ``fused_expand``
+                       kernel.  IC only.
+* ``data_parallel``  — batch *blocks* over a mesh axis via ``shard_map``:
+                       each shard traverses its own contiguous slice of the
+                       block with per-batch RNG streams, on its own device
+                       — pool builds parallelize across the mesh instead of
+                       staging one batch at a time through the default
+                       device (the ROADMAP's distributed-sampling item).
+
+LT diffusion: the facade owns live-edge weight normalization
+(`lt.normalize_lt_weights`, idempotent) on the reversed graph, so consumers
+can hand any IC-weighted graph to an LT sampler.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lt, rrr, tiles
+from repro.graph import csr
+from repro.sampling.spec import SamplerSpec
+
+__all__ = ["Sampler", "make_sampler"]
+
+
+class Sampler:
+    """Backend-agnostic sampling handle bound to one (graph, spec) pair.
+
+    ``sample(batch_index)`` returns one `rrr.RRRBatch`;
+    ``sample_many(batch_indices)`` a list of them (backends may batch the
+    work); ``sample_stacked(batch_indices)`` the stacked ``(B, V, W)``
+    visited masks (sharded over the mesh for the data_parallel backend).
+    """
+
+    def __init__(self, g: csr.Graph | None, spec: SamplerSpec, *,
+                 g_rev: csr.Graph | None = None):
+        if g is None and g_rev is None:
+            raise ValueError("need g or g_rev")
+        self.graph = g
+        self.spec = spec
+        g_rev = g_rev if g_rev is not None else csr.transpose(g)
+        if spec.diffusion == "lt":
+            # Idempotent: an already-normalized graph passes through.
+            g_rev = lt.normalize_lt_weights(g_rev)
+        self.g_rev = g_rev
+
+    # ------------------------------------------------------------ RNG
+    def batch_starts(self, batch_index: int) -> jnp.ndarray:
+        """(num_colors,) roots — the shared cross-backend derivation."""
+        return rrr.batch_starts(self.g_rev.num_vertices, self.spec.num_colors,
+                                self.spec.master_seed, batch_index,
+                                sort=self.spec.sort_starts)
+
+    def batch_seed(self, batch_index: int) -> jnp.ndarray:
+        return rrr.batch_seed(self.spec.master_seed, batch_index)
+
+    # ------------------------------------------------------- sampling
+    def sample(self, batch_index: int) -> rrr.RRRBatch:
+        raise NotImplementedError
+
+    def sample_many(self, batch_indices) -> list[rrr.RRRBatch]:
+        return [self.sample(int(b)) for b in batch_indices]
+
+    def sample_stacked(self, batch_indices) -> jnp.ndarray:
+        """(B, V, W) stacked visited masks for the given batch indices."""
+        return rrr.stack_visited(self.sample_many(batch_indices))
+
+
+class DenseSampler(Sampler):
+    """CSR edge-centric path — IC and LT."""
+
+    def sample(self, batch_index: int) -> rrr.RRRBatch:
+        return rrr.sample_batch(
+            self.g_rev, self.spec.num_colors, self.spec.master_seed,
+            int(batch_index), sort_starts=self.spec.sort_starts,
+            max_levels=self.spec.max_iters, model=self.spec.diffusion)
+
+
+class TiledSampler(Sampler):
+    """Block-sparse tile path (jnp oracle or Pallas kernel) — IC only.
+
+    The tile layout is built once per sampler from the reversed graph; the
+    counter RNG is keyed by *CSR edge id*, so results stay bit-identical to
+    the dense path.  Requires a parallel-edge-free graph
+    (``csr.from_edges(..., dedupe=True)``)."""
+
+    def __init__(self, g, spec, *, g_rev=None):
+        super().__init__(g, spec, g_rev=g_rev)
+        try:
+            self.tg_rev = tiles.from_graph(self.g_rev,
+                                           tile_size=spec.tile_size)
+        except ValueError as e:
+            raise ValueError(
+                f"the {spec.backend!r} backend needs a dedupe-clean graph "
+                "(build it with csr.from_edges(..., dedupe=True)); "
+                f"tiling failed with: {e}") from e
+
+    def sample(self, batch_index: int) -> rrr.RRRBatch:
+        return rrr.sample_batch(
+            self.g_rev, self.spec.num_colors, self.spec.master_seed,
+            int(batch_index), sort_starts=self.spec.sort_starts,
+            max_levels=self.spec.max_iters, tg_rev=self.tg_rev,
+            use_kernel=(self.spec.backend == "kernel"))
+
+
+class DataParallelSampler(Sampler):
+    """Batch blocks over a mesh axis via ``shard_map`` — IC and LT.
+
+    A block of B batch indices is padded to the shard count and sharded
+    ``P(axis)`` over its leading dim; each shard runs a sequential
+    ``lax.map`` of full traversals over its local slice (its own devices,
+    its own RNG streams — zero collectives).  Slot blocks land exactly
+    where `ShardedSketchStore` shards them, so pool builds and refreshes
+    parallelize across the mesh with no default-device staging.
+    """
+
+    def __init__(self, g, spec, mesh, *, g_rev=None):
+        super().__init__(g, spec, g_rev=g_rev)
+        if mesh is None:
+            raise ValueError("data_parallel backend needs a mesh")
+        if spec.mesh_axis not in mesh.axis_names:
+            raise ValueError(f"axis {spec.mesh_axis!r} not in mesh "
+                             f"{mesh.axis_names}")
+        self.mesh = mesh
+        self.axis = spec.mesh_axis
+        self._cb = (jnp.asarray(lt.selection_cum_before(self.g_rev))
+                    if spec.diffusion == "lt" else None)
+        self._block_fns: dict[int, object] = {}
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    # ----------------------------------------------------- block program
+    def _block_fn(self, padded: int):
+        """jit(shard_map) traversing ``padded`` batches, cached per size."""
+        fn = self._block_fns.get(padded)
+        if fn is None:
+            from jax.sharding import PartitionSpec as P
+
+            from repro.distributed.compat import shard_map
+            from repro.distributed.traversal import run_batch
+
+            g, spec, cb = self.g_rev, self.spec, self._cb
+
+            def one(starts, seed):
+                if spec.diffusion == "lt":
+                    sel = lt.selection_mask_from_cb(g, cb, spec.num_colors,
+                                                    seed)
+                    return lt.lt_traversal_program(g, sel, starts,
+                                                   spec.num_colors,
+                                                   spec.max_iters)
+                return run_batch(g, starts, seed, spec.num_colors,
+                                 max_levels=spec.max_iters)
+
+            def body(starts_local, seeds_local):
+                # Sequential over the shard's local slice: one (V, W)
+                # transient at a time per device, parallel across shards.
+                return jax.lax.map(lambda a: one(*a),
+                                   (starts_local, seeds_local))
+
+            fn = jax.jit(shard_map(body, self.mesh,
+                                   in_specs=(P(self.axis), P(self.axis)),
+                                   out_specs=P(self.axis)))
+            self._block_fns[padded] = fn
+        return fn
+
+    def _block(self, idx: list[int]):
+        """(visited, roots) for one padded block: visited (B, V, W) sharded
+        ``P(axis)``, roots (B, C) host numpy — starts are derived once and
+        shared by the traversal and the returned `RRRBatch` roots."""
+        s = self.num_shards
+        padded = -(-len(idx) // s) * s
+        # Pad with repeats of the last index: identical work, result dropped.
+        full = idx + [idx[-1]] * (padded - len(idx))
+        # Roots must come from the EXACT scalar jax.random.key(...) path the
+        # dense backend uses — the cross-backend bit-identity contract —
+        # so they are derived per batch and stacked ((B, C) ints, cheap
+        # next to the (B, V, W) traversal).  Seeds are pure uint32
+        # arithmetic and vectorize host-side.
+        starts = jnp.stack([self.batch_starts(b) for b in full])
+        seeds = jnp.asarray(rrr.batch_seeds(self.spec.master_seed, full))
+        vis = self._block_fn(padded)(starts, seeds)
+        # Slicing a sharded array re-gathers; keep the P(axis) layout when
+        # the block divides evenly (the pool-build case).
+        if padded != len(idx):
+            vis = vis[: len(idx)]
+        return vis, np.asarray(starts)[: len(idx)]
+
+    def sample_stacked(self, batch_indices) -> jnp.ndarray:
+        """(B, V, W) visited for the block, sharded ``P(axis)`` over B."""
+        idx = [int(b) for b in batch_indices]
+        if not idx:
+            return jnp.zeros((0, self.g_rev.num_vertices,
+                              _num_words(self.spec.num_colors)), jnp.uint32)
+        return self._block(idx)[0]
+
+    def sample_many(self, batch_indices) -> list[rrr.RRRBatch]:
+        """Block-sample, then split into host-staged `RRRBatch`es (each
+        shard's slice is fetched from its own device — the full block never
+        transits a single device).  Edge-visit stats carry the -1 "not
+        instrumented" sentinel, like the tiled and LT paths."""
+        idx = [int(b) for b in batch_indices]
+        if not idx:
+            return []
+        vis_sharded, roots = self._block(idx)
+        vis = np.asarray(jax.device_get(vis_sharded))
+        return [rrr.RRRBatch(vis[i], roots[i], b, -1, -1)
+                for i, b in enumerate(idx)]
+
+    def sample(self, batch_index: int) -> rrr.RRRBatch:
+        """Single batch: go through the dense path — padding a 1-batch
+        block to the shard count would traverse the same batch on every
+        shard for one kept result.  Bit-identical by the facade contract."""
+        if not hasattr(self, "_dense"):
+            self._dense = DenseSampler(self.graph,
+                                       self.spec.replace(backend="dense"),
+                                       g_rev=self.g_rev)
+        return self._dense.sample(batch_index)
+
+
+def _num_words(num_colors: int) -> int:
+    return -(-num_colors // 32)
+
+
+def make_sampler(g: csr.Graph | None, spec: SamplerSpec, mesh=None, *,
+                 g_rev: csr.Graph | None = None) -> Sampler:
+    """Build the `Sampler` for ``spec``.
+
+    ``g_rev``: prebuilt transpose(g) (skips one reversal; for LT it may be
+    raw or already LT-normalized — normalization is idempotent).  ``mesh``
+    is required by (and only used by) the ``data_parallel`` backend.
+    """
+    if spec.backend == "data_parallel":
+        return DataParallelSampler(g, spec, mesh, g_rev=g_rev)
+    if spec.backend in ("tiled", "kernel"):
+        return TiledSampler(g, spec, g_rev=g_rev)
+    return DenseSampler(g, spec, g_rev=g_rev)

@@ -1,0 +1,150 @@
+"""Typed sampler specification — ONE description of a fused-BPT sampling
+configuration, shared by every consumer of RRR batches.
+
+``SamplerSpec`` is frozen and hashable (all-primitive fields) so it can key
+jit caches, be embedded in ``PoolConfig``, and round-trip through checkpoint
+manifests.  The (diffusion × backend) support matrix:
+
+    backend \\ diffusion |  ic  |  lt
+    --------------------+------+------
+    dense               |  ✓   |  ✓     CSR edge-centric sweep
+    tiled               |  ✓   |  ✗     block-sparse tiles, jnp oracle
+    kernel              |  ✓   |  ✗     block-sparse tiles, Pallas kernel
+    data_parallel       |  ✓   |  ✓     shard_map batch blocks over a mesh
+
+The RNG contract every backend honors: batch ``b`` under ``master_seed`` is
+a pure function of ``(graph, master_seed, b)`` — the same ``(seed, starts)``
+derivation everywhere — so supported backends are bit-identical per batch
+index and a pool may be built under one backend and extended under another.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+DIFFUSIONS = ("ic", "lt")
+BACKENDS = ("dense", "tiled", "kernel", "data_parallel")
+
+# (diffusion, backend) pairs with an implementation behind them.  LT has no
+# tiled/Pallas expansion yet: its live-edge selection is per-(dst, color),
+# not per-(edge, color, level), so the IC expand kernel does not apply.
+_SUPPORTED = frozenset(
+    [("ic", b) for b in BACKENDS] + [("lt", "dense"), ("lt", "data_parallel")])
+
+
+def supported(diffusion: str, backend: str) -> bool:
+    """True iff the (diffusion, backend) cell of the matrix is implemented."""
+    return (diffusion, backend) in _SUPPORTED
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerSpec:
+    """Complete description of one traversal-sampling configuration.
+
+    ``max_iters`` is the level cap of the level-synchronous traversal (the
+    paper's ``max_levels``).  ``tile_size`` only matters to the tiled/kernel
+    backends; ``mesh_axis`` only to ``data_parallel``.
+    """
+    diffusion: str = "ic"
+    backend: str = "dense"
+    num_colors: int = 64
+    master_seed: int = 0
+    max_iters: int = 64
+    sort_starts: bool = False
+    tile_size: int = 128
+    mesh_axis: str = "data"
+
+    def __post_init__(self):
+        if self.diffusion not in DIFFUSIONS:
+            raise ValueError(f"diffusion {self.diffusion!r} not in "
+                             f"{DIFFUSIONS}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
+        if not supported(self.diffusion, self.backend):
+            raise ValueError(
+                f"unsupported combination diffusion={self.diffusion!r} × "
+                f"backend={self.backend!r}; supported: "
+                f"{sorted(_SUPPORTED)}")
+        if self.num_colors < 1 or self.max_iters < 1 or self.tile_size < 1:
+            raise ValueError("num_colors / max_iters / tile_size must be ≥ 1")
+
+    def replace(self, **kw) -> "SamplerSpec":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------- manifest round-trip
+    def to_manifest(self) -> dict:
+        """JSON-serializable form for checkpoint manifest ``extra``."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_manifest(cls, d: dict) -> "SamplerSpec":
+        """Inverse of ``to_manifest`` (unknown keys ignored — forward
+        compatible with manifests written by newer specs)."""
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+
+def resolve_spec(spec: SamplerSpec | None = None,
+                 sample_kw: dict | None = None, *,
+                 num_colors: int | None = None,
+                 master_seed: int | None = None) -> SamplerSpec:
+    """THE one spec-vs-arguments reconciliation policy, shared by every
+    consumer (`PoolConfig`, `run_imm`/`estimate_theta`,
+    `rrr.sample_collection`, `SamplingDriver`).
+
+    ``num_colors``/``master_seed`` are ``None`` when the caller did not set
+    them explicitly.  Legacy ``sample_kw`` dicts convert (with a
+    DeprecationWarning, exclusive with ``spec``); an explicit ``spec`` wins
+    over unset arguments, and a set argument that disagrees with the spec
+    raises — never a silent override.
+    """
+    nc = 64 if num_colors is None else num_colors
+    ms = 0 if master_seed is None else master_seed
+    if sample_kw:
+        if spec is not None:
+            raise ValueError("pass spec OR legacy sample_kw, not both")
+        return spec_from_sample_kw(sample_kw, num_colors=nc, master_seed=ms)
+    if spec is None:
+        return SamplerSpec(num_colors=nc, master_seed=ms)
+    for name, mine in (("num_colors", num_colors),
+                       ("master_seed", master_seed)):
+        theirs = getattr(spec, name)
+        if mine is not None and mine != theirs:
+            raise ValueError(f"{name}={mine} conflicts with "
+                             f"spec.{name}={theirs} — set it in one place")
+    return spec
+
+
+def spec_from_sample_kw(sample_kw: dict, *, num_colors: int = 64,
+                        master_seed: int = 0,
+                        warn: bool = True) -> SamplerSpec:
+    """Convert a legacy ``rrr.sample_batch``-kwargs dict to a `SamplerSpec`.
+
+    The old untyped dict (``PoolConfig.sample_kw`` / ``run_imm(**kw)``)
+    carried ``model``, ``tg_rev``/``use_kernel``, ``max_levels`` and
+    ``sort_starts``.  A prebuilt ``tg_rev`` cannot ride along (the facade
+    owns tiling) — its presence selects the tiled/kernel backend and the
+    tile layout is rebuilt from the graph.
+    """
+    if warn:
+        warnings.warn(
+            "sample_kw dicts are deprecated — pass a repro.sampling."
+            "SamplerSpec instead (converted automatically for now)",
+            DeprecationWarning, stacklevel=3)
+    kw = dict(sample_kw)
+    diffusion = kw.pop("model", "ic")
+    tg_rev = kw.pop("tg_rev", None)
+    use_kernel = kw.pop("use_kernel", False)
+    backend = "dense"
+    tile_size = 128
+    if tg_rev is not None:
+        backend = "kernel" if use_kernel else "tiled"
+        tile_size = int(getattr(tg_rev, "tile_size", 128))
+    spec = SamplerSpec(
+        diffusion=diffusion, backend=backend, num_colors=num_colors,
+        master_seed=master_seed, max_iters=int(kw.pop("max_levels", 64)),
+        sort_starts=bool(kw.pop("sort_starts", False)), tile_size=tile_size)
+    if kw:
+        raise ValueError(f"unknown sample_kw keys {sorted(kw)} — cannot "
+                         "convert to SamplerSpec")
+    return spec

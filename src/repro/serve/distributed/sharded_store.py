@@ -20,10 +20,13 @@ budget, which is the point of sharding.  To make that true on a real pod,
 the pool never materializes on one device: each sampled mask is staged to
 host memory, and ``visited_stack`` assembles the sharded stack from
 per-device blocks (`jax.make_array_from_single_device_arrays`), so device
-residency is exactly one slot block per shard.  Sampling itself runs one
-batch at a time on the default device (a (V, W) transient, 1/B of the
-pool); distributing the *sampling* across shards is a later step (see
-ROADMAP).
+residency is exactly one slot block per shard.  Sampling distributes too:
+with ``PoolConfig.spec.backend == "data_parallel"`` every ``ensure`` /
+``refresh`` traverses its whole block of new batch indices in ONE
+shard_map program — each shard computes its own contiguous slice with
+per-batch RNG streams on its own devices, so pool builds parallelize
+across the mesh instead of staging one batch at a time through the
+default device (other backends keep the sequential default-device path).
 
 Persistence: snapshots are written through the same manifest format as the
 base class, with the shard layout recorded in the manifest's ``extra``
@@ -60,7 +63,7 @@ class ShardedSketchStore(SketchStore):
     # only the per-shard blocks assembled by ``visited_stack``.
     _mask_array = staticmethod(np.asarray)
 
-    def __init__(self, g: csr.Graph, config: PoolConfig = PoolConfig(),
+    def __init__(self, g: csr.Graph, config: PoolConfig | None = None,
                  mesh: Mesh | None = None, *, axis: str = "data",
                  g_rev: csr.Graph | None = None):
         if mesh is None:
@@ -68,9 +71,19 @@ class ShardedSketchStore(SketchStore):
                              "SketchStore for single-device pools")
         if axis not in mesh.axis_names:
             raise ValueError(f"axis {axis!r} not in mesh {mesh.axis_names}")
-        super().__init__(g, config, g_rev=g_rev)
+        # Set before super().__init__: the base constructor builds the
+        # sampler through ``_make_sampler``, which reads the mesh.
         self.mesh = mesh
         self.axis = axis
+        super().__init__(g, config, g_rev=g_rev)
+
+    def _make_sampler(self, g: csr.Graph, spec, g_rev):
+        """Back the sampler with the store's mesh — a ``data_parallel``
+        spec builds each shard's slot block on that shard's own devices."""
+        from repro import sampling
+        if spec.backend == "data_parallel" and spec.mesh_axis != self.axis:
+            spec = spec.replace(mesh_axis=self.axis)
+        return sampling.make_sampler(g, spec, mesh=self.mesh, g_rev=g_rev)
 
     # ------------------------------------------------------------- layout
     @property
@@ -99,12 +112,16 @@ class ShardedSketchStore(SketchStore):
         return [i // per for i in range(len(self.batches))]
 
     # ----------------------------------------------------------- sampling
-    def _sample(self) -> rrr.RRRBatch:
+    def _sample_block(self, batch_indices: list[int]) -> list[rrr.RRRBatch]:
         # Stage each mask to host: persistent device residency must be
         # only the sharded stack (one slot block per shard), or the
         # sampling device would accumulate the whole pool and void the
-        # per-shard budget.
-        return _host_batch(super()._sample())
+        # per-shard budget.  With the ``data_parallel`` backend the block
+        # is traversed in ONE shard_map program (each shard computes its
+        # own contiguous slice on its own devices — the same contiguous
+        # layout ``visited_stack`` shards to) and arrives host-staged
+        # already; other backends run per batch on the default device.
+        return [_host_batch(b) for b in super()._sample_block(batch_indices)]
 
     # -------------------------------------------------------------- stack
     def visited_stack(self) -> jnp.ndarray:
@@ -146,13 +163,13 @@ class ShardedSketchStore(SketchStore):
         return self._stack
 
     # -------------------------------------------------------- persistence
-    def save(self, directory: str, *, keep: int = 3) -> None:
-        """Manifest snapshot with the shard layout recorded in ``extra``."""
-        manager.save(directory, self.epoch, self._tree(), keep=keep,
-                     extra={"kind": "sharded_sketch_pool",
-                            "mesh_axis": self.axis,
-                            "num_shards": self.num_shards,
-                            "shard_layout": self.shard_layout()})
+    def _manifest_extra(self) -> dict:
+        """Shard layout + the `SamplerSpec` (base class) in one ``extra``."""
+        return {**super()._manifest_extra(),
+                "kind": "sharded_sketch_pool",
+                "mesh_axis": self.axis,
+                "num_shards": self.num_shards,
+                "shard_layout": self.shard_layout()}
 
     @staticmethod
     def saved_layout(directory: str, step: int | None = None) -> dict:
@@ -162,7 +179,7 @@ class ShardedSketchStore(SketchStore):
 
     @classmethod
     def restore(cls, directory: str, g: csr.Graph,
-                config: PoolConfig = PoolConfig(),
+                config: PoolConfig | None = None,
                 mesh: Mesh | None = None, *, axis: str = "data",
                 step: int | None = None,
                 g_rev: csr.Graph | None = None) -> "ShardedSketchStore":
@@ -176,7 +193,7 @@ class ShardedSketchStore(SketchStore):
         transits the pool through a single device.
         """
         config, epoch, nbi, batches, epochs = cls._restored_fields(
-            directory, config, step)
+            directory, config if config is not None else PoolConfig(), step)
         store = cls(g, config, mesh, axis=axis, g_rev=g_rev)
         store.epoch = epoch
         store.next_batch_index = nbi

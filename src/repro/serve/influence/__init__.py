@@ -16,10 +16,11 @@ and restore through the checkpoint manifest format.
     t2 = batcher.submit_marginal(exclude=[3, 17])
     results = batcher.flush()                 # one padded device dispatch/kind
 """
+from repro.sampling import SamplerSpec
 from repro.serve.influence.batcher import FlushError, MicroBatcher
 from repro.serve.influence.cache import ResultCache
 from repro.serve.influence.engine import QueryEngine
 from repro.serve.influence.sketch_store import PoolConfig, SketchStore
 
 __all__ = ["FlushError", "MicroBatcher", "PoolConfig", "QueryEngine",
-           "ResultCache", "SketchStore"]
+           "ResultCache", "SamplerSpec", "SketchStore"]

@@ -7,6 +7,13 @@ device-memory budget.  It implements the sketch-pool protocol that
 ``master_seed``, ``ensure``), so offline IMM and the online
 `engine.QueryEngine` share one sampled asset.
 
+Sampling routes through the `repro.sampling` facade: ``PoolConfig.spec`` is
+a typed, frozen `SamplerSpec` (diffusion × backend + knobs) and the store
+builds one `Sampler` from it — the same spec serves IC and LT pools, dense
+and tiled/kernel expansion, and (in the sharded subclass) shard_map
+data-parallel pool builds.  The old untyped ``sample_kw`` dict converts
+with a DeprecationWarning.
+
 Freshness is tracked per batch with an **epoch** tag: ``refresh()`` bumps
 the store epoch and resamples the oldest batches with brand-new batch
 indices (hence new RNG streams — never a repeat of a retired sample).  Any
@@ -14,8 +21,11 @@ mutation changes ``version``, which keys the result cache.
 
 Persistence rides the checkpoint manifest format (`checkpoint.manager`):
 ``save()`` writes an atomic ``step_<N>/{manifest.json, leaf_*.npy}``
-snapshot of the pool tensors + counters; ``SketchStore.restore`` rebuilds a
-bit-identical pool (uint32 masks round-trip exactly through ``.npy``).
+snapshot of the pool tensors + counters, with the `SamplerSpec` recorded in
+the manifest ``extra``; ``SketchStore.restore`` rebuilds a bit-identical
+pool (uint32 masks round-trip exactly through ``.npy``) and REFUSES a
+diffusion mismatch — a pool sampled under IC is never silently served as
+LT or vice versa.
 """
 from __future__ import annotations
 
@@ -29,20 +39,47 @@ import numpy as np
 from repro.checkpoint import manager
 from repro.core import bitmask, rrr
 from repro.graph import csr
+from repro.sampling import SamplerSpec, resolve_spec
 
 
 @dataclasses.dataclass(frozen=True)
 class PoolConfig:
-    """Sizing + sampling knobs for a sketch pool.
+    """Sizing + sampling knobs for a sketch pool.  Frozen AND fully
+    immutable (every field hashable), so a config can key jit caches.
 
     ``memory_budget_mb`` (when set) caps ``max_batches`` by the device bytes
     of one ``(V, W)`` uint32 batch — the pool never allocates past it.
+
+    ``spec`` types the sampling configuration; after ``__post_init__`` it is
+    always a resolved `SamplerSpec` (the default is dense IC built from
+    ``num_colors``/``master_seed``, which default to 64/0 when unset).
+    When an explicit spec is given, ``num_colors``/``master_seed`` are
+    adopted from it, and an explicitly-set value that disagrees with the
+    spec raises (``sampling.resolve_spec`` — the ``None`` field defaults
+    make "explicitly set" detectable).  ``sample_kw`` is the deprecated
+    untyped dict — converted to a spec with a warning.
     """
-    num_colors: int = 64
+    num_colors: int | None = None
     max_batches: int = 64
     memory_budget_mb: float | None = None
-    master_seed: int = 0
-    sample_kw: dict = dataclasses.field(default_factory=dict)
+    master_seed: int | None = None
+    spec: SamplerSpec | None = None
+    sample_kw: dataclasses.InitVar[dict | None] = None
+
+    def __post_init__(self, sample_kw):
+        spec = resolve_spec(self.spec, sample_kw,
+                            num_colors=self.num_colors,
+                            master_seed=self.master_seed)
+        object.__setattr__(self, "num_colors", spec.num_colors)
+        object.__setattr__(self, "master_seed", spec.master_seed)
+        object.__setattr__(self, "spec", spec)
+
+    def with_master_seed(self, master_seed: int) -> "PoolConfig":
+        """Config with ``master_seed`` replaced consistently in the spec
+        too (restore adopts a snapshot's seed this way)."""
+        return dataclasses.replace(
+            self, master_seed=master_seed,
+            spec=self.spec.replace(master_seed=master_seed))
 
 
 class SketchStore:
@@ -53,18 +90,30 @@ class SketchStore:
     # restore must never transit the whole pool through one device).
     _mask_array = staticmethod(jnp.asarray)
 
-    def __init__(self, g: csr.Graph, config: PoolConfig = PoolConfig(), *,
+    def __init__(self, g: csr.Graph, config: PoolConfig | None = None, *,
                  g_rev: csr.Graph | None = None):
         self.graph = g
-        self.g_rev = g_rev if g_rev is not None else csr.transpose(g)
-        self.config = config
+        self.config = config if config is not None else PoolConfig()
+        self.sampler = self._make_sampler(g, self.config.spec, g_rev)
+        # The sampler owns graph reversal (and LT weight normalization).
+        self.g_rev = self.sampler.g_rev
         self.epoch = 0
         self.next_batch_index = 0
         self.batches: list[rrr.RRRBatch] = []
         self.batch_epochs: list[int] = []
         self._stack: jnp.ndarray | None = None
 
+    def _make_sampler(self, g: csr.Graph, spec: SamplerSpec,
+                      g_rev: csr.Graph | None):
+        """Subclass hook — the sharded store passes its mesh here."""
+        from repro import sampling
+        return sampling.make_sampler(g, spec, g_rev=g_rev)
+
     # ------------------------------------------------------------- sizing
+    @property
+    def spec(self) -> SamplerSpec:
+        return self.config.spec
+
     @property
     def num_colors(self) -> int:
         return self.config.num_colors
@@ -97,12 +146,17 @@ class SketchStore:
         return (self.epoch, len(self.batches))
 
     # ----------------------------------------------------------- sampling
-    def _sample(self) -> rrr.RRRBatch:
-        b = rrr.sample_batch(self.g_rev, self.config.num_colors,
-                             self.config.master_seed, self.next_batch_index,
-                             **self.config.sample_kw)
-        self.next_batch_index += 1
-        return b
+    def _sample_block(self, batch_indices: list[int]) -> list[rrr.RRRBatch]:
+        """Sample a block of batch indices through the store's sampler —
+        ONE facade call, so block-capable backends (data_parallel) build
+        every slot in parallel instead of one batch at a time."""
+        return self.sampler.sample_many(batch_indices)
+
+    def _take_indices(self, count: int) -> list[int]:
+        """Allocate ``count`` never-before-used batch indices (RNG streams)."""
+        idx = list(range(self.next_batch_index, self.next_batch_index + count))
+        self.next_batch_index += count
+        return idx
 
     def ensure(self, num_batches: int) -> list[rrr.RRRBatch]:
         """Grow the pool to ≥ ``num_batches`` (clamped to capacity).
@@ -111,12 +165,11 @@ class SketchStore:
         batch list (callers must not mutate it).
         """
         want = min(num_batches, self.capacity)
-        grew = False
-        while len(self.batches) < want:
-            self.batches.append(self._sample())
-            self.batch_epochs.append(self.epoch)
-            grew = True
-        if grew:
+        missing = want - len(self.batches)
+        if missing > 0:
+            for b in self._sample_block(self._take_indices(missing)):
+                self.batches.append(b)
+                self.batch_epochs.append(self.epoch)
             self._stack = None
         return self.batches
 
@@ -144,8 +197,8 @@ class SketchStore:
         order = sorted(range(len(self.batches)),
                        key=lambda i: (self.batch_epochs[i], i))
         slots = order[:count]
-        for i in slots:
-            self.batches[i] = self._sample()
+        for i, b in zip(slots, self._sample_block(self._take_indices(count))):
+            self.batches[i] = b
             self.batch_epochs[i] = self.epoch
         self._stack = None
         return slots
@@ -166,9 +219,16 @@ class SketchStore:
                  self.config.master_seed, self.config.num_colors], np.int64),
         }
 
+    def _manifest_extra(self) -> dict:
+        """Manifest ``extra`` metadata — the `SamplerSpec` always rides
+        along so restore can refuse a diffusion mismatch."""
+        return {"kind": "sketch_pool",
+                "sampler_spec": self.config.spec.to_manifest()}
+
     def save(self, directory: str, *, keep: int = 3) -> None:
         """Atomic manifest snapshot; step number = store epoch."""
-        manager.save(directory, self.epoch, self._tree(), keep=keep)
+        manager.save(directory, self.epoch, self._tree(), keep=keep,
+                     extra=self._manifest_extra())
 
     @classmethod
     def _restored_fields(cls, directory: str, config: PoolConfig,
@@ -181,6 +241,16 @@ class SketchStore:
         if step is None:
             raise FileNotFoundError(f"no sketch-pool snapshot in {directory}")
         manifest = manager.read_manifest(directory, step)
+        saved_spec = manifest.get("extra", {}).get("sampler_spec")
+        if saved_spec is not None:
+            saved = SamplerSpec.from_manifest(saved_spec)
+            if saved.diffusion != config.spec.diffusion:
+                raise ValueError(
+                    f"snapshot was sampled under diffusion "
+                    f"{saved.diffusion!r} but the restore config requests "
+                    f"{config.spec.diffusion!r} — an IC pool must never be "
+                    "silently served as LT (or vice versa); restore with a "
+                    "matching SamplerSpec")
         target = {e["path"]: np.zeros(e["shape"], manager._np_dtype(e["dtype"]))
                   for e in manifest["leaves"]}
         tree, _ = manager.restore(directory, target, step, as_numpy=True)
@@ -188,7 +258,7 @@ class SketchStore:
         if int(counters[3]) != config.num_colors:
             raise ValueError(f"snapshot colors {int(counters[3])} != "
                              f"config {config.num_colors}")
-        config = dataclasses.replace(config, master_seed=int(counters[2]))
+        config = config.with_master_seed(int(counters[2]))
         visited = np.asarray(tree["visited"])
         roots = np.asarray(tree["roots"])
         indices = np.asarray(tree["batch_indices"])
@@ -203,12 +273,12 @@ class SketchStore:
 
     @classmethod
     def restore(cls, directory: str, g: csr.Graph,
-                config: PoolConfig = PoolConfig(), *,
+                config: PoolConfig | None = None, *,
                 step: int | None = None,
                 g_rev: csr.Graph | None = None) -> "SketchStore":
         """Rebuild a bit-identical pool from the latest (or given) snapshot."""
         config, epoch, nbi, batches, epochs = cls._restored_fields(
-            directory, config, step)
+            directory, config if config is not None else PoolConfig(), step)
         store = cls(g, config, g_rev=g_rev)
         store.epoch = epoch
         store.next_batch_index = nbi

@@ -19,6 +19,7 @@ import time                     # noqa: E402
 import numpy as np              # noqa: E402
 import jax                      # noqa: E402
 
+from repro import sampling                                  # noqa: E402
 from repro.graph import generators                          # noqa: E402
 from repro.serve.influence import (MicroBatcher, PoolConfig,    # noqa: E402
                                    QueryEngine, ResultCache, SketchStore)
@@ -102,6 +103,91 @@ def main():
         np.testing.assert_array_equal(s1, sp)
         assert sig1 == sigp
     print("OK elastic_restore")
+
+    # ---- data_parallel sampler: shard_map blocks ≡ dense per-batch --------
+    # The unified Sampler contract on a real multi-device mesh: the same
+    # (master_seed, batch_index) yields bit-identical visited masks whether
+    # batches run one at a time on the default device (dense) or as a
+    # sharded block with per-shard RNG streams (data_parallel), for both
+    # diffusions.
+    for diffusion in ("ic", "lt"):
+        spec = sampling.SamplerSpec(diffusion=diffusion,
+                                    backend="data_parallel",
+                                    num_colors=64, master_seed=3)
+        dp = sampling.make_sampler(g, spec, mesh=mesh8)
+        dense = sampling.make_sampler(g, spec.replace(backend="dense"))
+        for got in dp.sample_many(range(7)):        # ragged on 8 shards
+            ref = dense.sample(got.batch_index)
+            np.testing.assert_array_equal(np.asarray(got.visited),
+                                          np.asarray(ref.visited))
+            np.testing.assert_array_equal(got.roots, np.asarray(ref.roots))
+        stacked = dp.sample_stacked(range(8))
+        assert stacked.sharding.spec == jax.sharding.PartitionSpec("data")
+    print("OK data_parallel_sampling")
+
+    # ---- data_parallel pool builds: ensure + refresh via shard_map --------
+    # ShardedSketchStore with the data_parallel spec builds/refreshes shard
+    # slots in one shard_map block (no per-batch default-device staging)
+    # and stays bit-identical to the 1-device dense pool, slot for slot.
+    dp_cfg = PoolConfig(max_batches=32,
+                        spec=sampling.SamplerSpec(backend="data_parallel",
+                                                  num_colors=64,
+                                                  master_seed=3))
+    dp_store = ShardedSketchStore(g, dp_cfg, mesh8)
+    dp_store.ensure(8)
+    ref_store = SketchStore(g, cfg)                 # dense, master_seed=3
+    ref_store.ensure(8)
+    for a, b in zip(ref_store.batches, dp_store.batches):
+        assert a.batch_index == b.batch_index
+        np.testing.assert_array_equal(np.asarray(a.visited),
+                                      np.asarray(b.visited))
+    slots_dp = dp_store.refresh(0.5)
+    slots_ref = ref_store.refresh(0.5)
+    assert slots_dp == slots_ref and dp_store.epoch == ref_store.epoch
+    for a, b in zip(ref_store.batches, dp_store.batches):
+        assert a.batch_index == b.batch_index
+        np.testing.assert_array_equal(np.asarray(a.visited),
+                                      np.asarray(b.visited))
+    ed, er = DistributedQueryEngine(dp_store), QueryEngine(ref_store)
+    sd, sigd = ed.top_k(4)
+    sr, sigr = er.top_k(4)
+    np.testing.assert_array_equal(sd, sr)
+    assert sigd == sigr
+    # spec rides the manifest: an LT restore of this IC pool must refuse
+    with tempfile.TemporaryDirectory() as d:
+        dp_store.save(d)
+        assert ShardedSketchStore.saved_layout(d)["sampler_spec"][
+            "backend"] == "data_parallel"
+        try:
+            ShardedSketchStore.restore(
+                d, g, PoolConfig(spec=dp_cfg.spec.replace(diffusion="lt")),
+                mesh8)
+            raise AssertionError("diffusion mismatch must raise")
+        except ValueError as e:
+            assert "diffusion" in str(e)
+        r = ShardedSketchStore.restore(d, g, dp_cfg, mesh8)
+        s2, sig2 = DistributedQueryEngine(r).top_k(4)
+        np.testing.assert_array_equal(sd, s2)
+        assert sigd == sig2
+    print("OK data_parallel_pool")
+
+    # ---- LT diffusion through the full distributed stack ------------------
+    lt_cfg = PoolConfig(max_batches=32,
+                        spec=sampling.SamplerSpec(diffusion="lt",
+                                                  backend="data_parallel",
+                                                  num_colors=64,
+                                                  master_seed=5))
+    lt_store = ShardedSketchStore(g, lt_cfg, mesh8)
+    lt_store.ensure(8)
+    lt_single = SketchStore(
+        g, PoolConfig(max_batches=32,
+                      spec=lt_cfg.spec.replace(backend="dense")))
+    lt_single.ensure(8)
+    lt_seeds, lt_sig = DistributedQueryEngine(lt_store).top_k(4)
+    l1_seeds, l1_sig = QueryEngine(lt_single).top_k(4)
+    np.testing.assert_array_equal(lt_seeds, l1_seeds)
+    assert lt_sig == l1_sig and lt_sig > 0
+    print("OK lt_data_parallel")
 
     # ---- async front-end: deadline flush, concurrency, refresh ------------
     deadline = 0.2

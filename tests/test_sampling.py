@@ -1,0 +1,209 @@
+"""Unified Sampler API: spec validation, cross-backend bit-identity (dense
+vs tiled vs kernel, single process), LT serving end-to-end, PoolConfig spec
+migration, and the manifest diffusion guard.  (The data_parallel backend
+needs forced host devices — covered by tests/serve_distributed_check.py.)"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import sampling
+from repro.core import imm, lt, rrr
+from repro.graph import csr, generators
+from repro.serve.influence import (MicroBatcher, PoolConfig, QueryEngine,
+                                   ResultCache, SketchStore)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    """Dedupe-clean graph: the tile layout (tiled/kernel backends) needs
+    parallel edges merged, and bit-identity requires one shared edge list."""
+    g = generators.powerlaw_cluster(250, 6.0, prob=(0.1, 0.6), seed=23)
+    e = g.num_edges
+    return csr.from_edges(np.asarray(g.src)[:e], np.asarray(g.dst)[:e],
+                          np.asarray(g.prob)[:e], g.num_vertices,
+                          dedupe=True)
+
+
+# ----------------------------------------------------------------- spec
+def test_spec_rejects_unknown_fields_and_combos():
+    with pytest.raises(ValueError):
+        sampling.SamplerSpec(diffusion="sir")
+    with pytest.raises(ValueError):
+        sampling.SamplerSpec(backend="warp")
+    for bad in ("tiled", "kernel"):
+        with pytest.raises(ValueError, match="unsupported combination"):
+            sampling.SamplerSpec(diffusion="lt", backend=bad)
+    assert sampling.supported("ic", "kernel")
+    assert not sampling.supported("lt", "kernel")
+
+
+def test_spec_is_hashable_and_manifest_round_trips():
+    spec = sampling.SamplerSpec(diffusion="lt", num_colors=96, master_seed=4)
+    assert hash(spec) == hash(dataclasses.replace(spec))
+    assert sampling.SamplerSpec.from_manifest(spec.to_manifest()) == spec
+    # forward compat: unknown manifest keys are ignored
+    d = spec.to_manifest() | {"future_knob": 1}
+    assert sampling.SamplerSpec.from_manifest(d) == spec
+
+
+def test_spec_from_sample_kw_warns_and_converts(graph):
+    with pytest.warns(DeprecationWarning):
+        spec = sampling.spec_from_sample_kw(
+            {"model": "lt", "max_levels": 32, "sort_starts": True},
+            num_colors=32, master_seed=9)
+    assert spec == sampling.SamplerSpec(
+        diffusion="lt", backend="dense", num_colors=32, master_seed=9,
+        max_iters=32, sort_starts=True)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="unknown sample_kw"):
+            sampling.spec_from_sample_kw({"bogus": 1})
+
+
+# --------------------------------------------- cross-backend bit identity
+def test_dense_tiled_kernel_bit_identical(graph):
+    """Same (master_seed, batch_index) ⇒ identical RRRBatch.visited on
+    every backend (the facade's core contract)."""
+    specs = {b: sampling.SamplerSpec(backend=b, num_colors=64, master_seed=5)
+             for b in ("dense", "tiled", "kernel")}
+    samplers = {b: sampling.make_sampler(graph, s) for b, s in specs.items()}
+    for bi in (0, 3):
+        ref = samplers["dense"].sample(bi)
+        assert ref.batch_index == bi
+        for b in ("tiled", "kernel"):
+            got = samplers[b].sample(bi)
+            np.testing.assert_array_equal(np.asarray(got.visited),
+                                          np.asarray(ref.visited))
+            np.testing.assert_array_equal(got.roots, ref.roots)
+
+
+def test_sampler_matches_legacy_sample_batch(graph):
+    s = sampling.make_sampler(graph, sampling.SamplerSpec(num_colors=64,
+                                                          master_seed=11))
+    ref = rrr.sample_batch(csr.transpose(graph), 64, 11, 2)
+    got = s.sample(2)
+    np.testing.assert_array_equal(np.asarray(got.visited),
+                                  np.asarray(ref.visited))
+
+
+def test_lt_sampler_normalizes_weights_itself(graph):
+    """The facade owns LT normalization: a raw IC-weighted graph and a
+    pre-normalized one sample identically (normalization is idempotent)."""
+    spec = sampling.SamplerSpec(diffusion="lt", num_colors=64, master_seed=7)
+    raw = sampling.make_sampler(graph, spec)
+    pre = sampling.make_sampler(
+        graph, spec, g_rev=lt.normalize_lt_weights(csr.transpose(graph)))
+    np.testing.assert_array_equal(np.asarray(raw.sample(1).visited),
+                                  np.asarray(pre.sample(1).visited))
+
+
+def test_tiled_backend_rejects_parallel_edges():
+    src = np.array([0, 0, 1]); dst = np.array([1, 1, 2])
+    g = csr.from_edges(src, dst, np.full(3, 0.5, np.float32), 3)
+    with pytest.raises(ValueError, match="dedupe"):
+        sampling.make_sampler(g, sampling.SamplerSpec(backend="tiled"))
+
+
+def test_data_parallel_requires_mesh(graph):
+    with pytest.raises(ValueError, match="mesh"):
+        sampling.make_sampler(
+            graph, sampling.SamplerSpec(backend="data_parallel"))
+
+
+# ------------------------------------------------------------ PoolConfig
+def test_pool_config_resolves_default_spec():
+    cfg = PoolConfig(num_colors=32, master_seed=6)
+    assert cfg.spec == sampling.SamplerSpec(num_colors=32, master_seed=6)
+    assert hash(cfg) == hash(PoolConfig(num_colors=32, master_seed=6))
+
+
+def test_pool_config_spec_wins_and_conflicts_raise():
+    spec = sampling.SamplerSpec(num_colors=128, master_seed=3)
+    cfg = PoolConfig(spec=spec)                 # defaults adopt the spec
+    assert cfg.num_colors == 128 and cfg.master_seed == 3
+    with pytest.raises(ValueError, match="conflicts"):
+        PoolConfig(num_colors=64, master_seed=9, spec=spec)
+
+
+def test_pool_config_sample_kw_shim_warns(graph):
+    with pytest.warns(DeprecationWarning):
+        cfg = PoolConfig(num_colors=64, master_seed=2,
+                         sample_kw={"model": "lt"})
+    assert cfg.spec.diffusion == "lt"
+    store = SketchStore(graph, cfg)
+    store.ensure(1)
+    ref = sampling.make_sampler(
+        graph, sampling.SamplerSpec(diffusion="lt", num_colors=64,
+                                    master_seed=2)).sample(0)
+    np.testing.assert_array_equal(np.asarray(store.batches[0].visited),
+                                  np.asarray(ref.visited))
+
+
+def test_pool_config_instances_share_no_mutable_state():
+    """The old frozen-dataclass-with-dict-default bug: two default configs
+    must not alias a mutable field (the spec is frozen and hashable now)."""
+    a, b = PoolConfig(), PoolConfig()
+    assert a == b and a.spec == b.spec
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.spec = None
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.spec.num_colors = 1
+
+
+# -------------------------------------------- LT serving smoke end-to-end
+def test_lt_pool_serves_topk_end_to_end(graph):
+    cfg = PoolConfig(max_batches=64,
+                     spec=sampling.SamplerSpec(diffusion="lt", num_colors=64,
+                                               master_seed=13))
+    store = SketchStore(graph, cfg)
+    store.ensure(6)
+    engine = QueryEngine(store)
+    batcher = MicroBatcher(engine, cache=ResultCache())
+    t = batcher.submit_top_k(4)
+    seeds, sigma = batcher.flush()[t]
+    assert len(set(seeds.tolist())) == 4 and sigma > 0
+    # LT seeds must agree with greedy max-cover over the same LT pool
+    ref, cov = imm.greedy_max_cover(store.visited_stack(), 4, 64)
+    np.testing.assert_array_equal(seeds, ref)
+    # and run_imm under the same spec routes through the pool identically
+    fresh = SketchStore(graph, cfg)
+    res = imm.run_imm(graph, k=4, eps=0.5, spec=cfg.spec, theta_cap=512,
+                      pool=fresh)
+    plain = imm.run_imm(graph, k=4, eps=0.5, spec=cfg.spec, theta_cap=512)
+    np.testing.assert_array_equal(res.seeds, plain.seeds)
+
+
+def test_run_imm_legacy_sample_kw_warns(graph):
+    with pytest.warns(DeprecationWarning):
+        res = imm.run_imm(graph, k=2, eps=0.5, num_colors=64, master_seed=1,
+                          theta_cap=256, sort_starts=True)
+    assert len(res.seeds) == 2
+
+
+# -------------------------------------------------- manifest spec guard
+def test_restore_refuses_diffusion_mismatch(graph, tmp_path):
+    """An IC-sampled pool must never silently serve as LT (or vice versa)."""
+    ic_cfg = PoolConfig(num_colors=64, master_seed=8)
+    store = SketchStore(graph, ic_cfg)
+    store.ensure(2)
+    store.save(str(tmp_path))
+    lt_cfg = PoolConfig(
+        spec=sampling.SamplerSpec(diffusion="lt", num_colors=64,
+                                  master_seed=8))
+    with pytest.raises(ValueError, match="diffusion"):
+        SketchStore.restore(str(tmp_path), graph, lt_cfg)
+    # matching spec restores bit-identically and keeps the spec
+    r = SketchStore.restore(str(tmp_path), graph, ic_cfg)
+    assert r.spec == store.spec
+    np.testing.assert_array_equal(np.asarray(store.visited_stack()),
+                                  np.asarray(r.visited_stack()))
+
+
+def test_manifest_records_sampler_spec(graph, tmp_path):
+    from repro.checkpoint import manager
+    spec = sampling.SamplerSpec(diffusion="lt", num_colors=64, master_seed=1)
+    store = SketchStore(graph, PoolConfig(spec=spec))
+    store.ensure(1)
+    store.save(str(tmp_path))
+    extra = manager.read_manifest(str(tmp_path)).get("extra", {})
+    assert sampling.SamplerSpec.from_manifest(extra["sampler_spec"]) == spec

@@ -29,7 +29,9 @@ def test_sharded_serving_equivalence():
     assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
     for marker in ("OK shard_slots", "OK engine_equivalence",
                    "OK ragged_shards", "OK per_shard_budget",
-                   "OK elastic_restore", "OK async_frontend"):
+                   "OK elastic_restore", "OK data_parallel_sampling",
+                   "OK data_parallel_pool", "OK lt_data_parallel",
+                   "OK async_frontend"):
         assert marker in proc.stdout, proc.stdout
 
 
