@@ -1,4 +1,5 @@
-"""Pool build throughput: sampler backend × shard count → batches/sec.
+"""Pool build throughput: sampler backend × shard count / mesh shape →
+batches/sec.
 
 Sweeps the unified Sampler API's backends over a sketch-pool build on a
 forced 8-device CPU host mesh (the multi-device test-suite trick):
@@ -7,7 +8,12 @@ forced 8-device CPU host mesh (the multi-device test-suite trick):
                        pre-refactor `SketchStore` path);
 * ``data_parallel``  — whole batch blocks via shard_map, each shard
                        traversing its own contiguous slot slice, swept over
-                       shard counts.
+                       shard counts;
+* ``graph_parallel`` — 2-D (data × model) meshes: destination rows sharded
+                       over ``model`` (frontier all-gather per level),
+                       batches over ``data``, swept over mesh shapes — the
+                       collective-bound regime for graphs too big for one
+                       device.
 
 Each cell builds the SAME pool (bit-identical per slot — asserted) so the
 rows measure pure build mechanics.  Shard counts on one CPU share silicon,
@@ -39,23 +45,28 @@ def _worker(args: dict) -> None:
     from jax.sharding import Mesh
 
     from repro import sampling
-    from repro.graph import generators
+    from repro.graph import csr, generators
     from repro.serve.distributed import ShardedSketchStore
     from repro.serve.influence import PoolConfig, SketchStore
 
-    g = generators.powerlaw_cluster(args["n"], args["deg"],
-                                    prob=(0.0, 0.25), seed=11)
+    # Dedupe once for every backend: the graph_parallel tile layout needs
+    # parallel edges merged, and bit-identity needs one shared edge list.
+    g = csr.dedupe(generators.powerlaw_cluster(args["n"], args["deg"],
+                                               prob=(0.0, 0.25), seed=11))
 
-    def build(backend: str, shards: int):
+    def build(backend: str, mesh_shape: tuple[int, int]):
+        d, m = mesh_shape
         spec = sampling.SamplerSpec(diffusion=args["diffusion"],
                                     backend=backend,
                                     num_colors=args["colors"], master_seed=7)
         cfg = PoolConfig(max_batches=args["batches"], spec=spec)
-        if backend == "data_parallel":
-            mesh = Mesh(np.array(jax.devices()[:shards]), ("data",))
-            store = ShardedSketchStore(g, cfg, mesh)
-        else:
+        if backend == "dense":
             store = SketchStore(g, cfg)
+        else:
+            devs = np.array(jax.devices()[: d * m])
+            mesh = Mesh(devs.reshape(d, m), ("data", "model")) if m > 1 \
+                else Mesh(devs, ("data",))
+            store = ShardedSketchStore(g, cfg, mesh)
         store.ensure(1)                          # compile outside the timing
         t0 = time.perf_counter()
         store.ensure(args["batches"])
@@ -65,10 +76,13 @@ def _worker(args: dict) -> None:
         refresh_s = time.perf_counter() - t0
         return store, build_s, refresh_s
 
+    cells = ([("dense", (1, 1))]
+             + [("data_parallel", (s, 1)) for s in args["shard_counts"]]
+             + [("graph_parallel", tuple(dm))
+                for dm in args["gp_mesh_shapes"]])
     ref_store = None
-    for backend, shards in [("dense", 1)] + [("data_parallel", s)
-                                             for s in args["shard_counts"]]:
-        store, build_s, refresh_s = build(backend, shards)
+    for backend, (d, m) in cells:
+        store, build_s, refresh_s = build(backend, (d, m))
         if ref_store is None:
             ref_store = store        # the measured dense row IS the reference
         for a, b in zip(ref_store.batches, store.batches):   # bit identity
@@ -77,7 +91,11 @@ def _worker(args: dict) -> None:
         built = args["batches"] - 1              # ensure(1) pre-built one
         row = {
             "backend": backend,
-            "shards": shards,
+            "mesh": f"{d}x{m}",
+            # Slot-shard count (== store.num_shards): the pool's batch
+            # parallelism.  A graph_parallel (d, m) cell has d-way batch
+            # parallelism — its m-way row partition lives in "mesh".
+            "shards": getattr(store, "num_shards", 1),
             "batches": args["batches"],
             "colors": args["colors"],
             "build_s": round(build_s, 3),
@@ -92,9 +110,12 @@ def _worker(args: dict) -> None:
 
 # ------------------------------------------------------------------ driver
 def run(n=600, deg=8.0, colors=64, batches=8, shard_counts=(1, 4, 8),
-        diffusion="ic", out=print, json_path="BENCH_pool_build.json"):
+        gp_mesh_shapes=((4, 2), (2, 4)), diffusion="ic", out=print,
+        json_path="BENCH_pool_build.json"):
     params = {"n": n, "deg": deg, "colors": colors, "batches": batches,
-              "shard_counts": list(shard_counts), "diffusion": diffusion}
+              "shard_counts": list(shard_counts),
+              "gp_mesh_shapes": [list(dm) for dm in gp_mesh_shapes],
+              "diffusion": diffusion}
     env = dict(os.environ)
     src = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "src")
@@ -111,10 +132,11 @@ def run(n=600, deg=8.0, colors=64, batches=8, shard_counts=(1, 4, 8),
         elif line.startswith("ENV "):
             bench_env = json.loads(line[4:])
 
-    out("# pool build: backend,shards,batches,build_s,batches_per_s,refresh_s")
+    out("# pool build: backend,mesh,shards,batches,build_s,"
+        "batches_per_s,refresh_s")
     for r in rows:
         out(",".join(str(r[k]) for k in
-                     ("backend", "shards", "batches", "build_s",
+                     ("backend", "mesh", "shards", "batches", "build_s",
                       "batches_per_s", "refresh_s")))
 
     record = {"bench": "pool_build", "schema": 1,

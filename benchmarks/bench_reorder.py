@@ -31,9 +31,7 @@ def run(n=4000, deg=12.0, colors=32, prob=0.25, out=print):
         occ = float(res.stats.occupancy_num[:lv].mean()) if lv else 0.0
         e = g2.num_edges
         from repro.graph import csr
-        g2d = csr.from_edges(np.asarray(g2.src)[:e], np.asarray(g2.dst)[:e],
-                             np.asarray(g2.prob)[:e], g2.num_vertices,
-                             dedupe=True)
+        g2d = csr.dedupe(g2)
         tg = tiles.from_graph(g2d)
         st = tiles.tile_stats(tg)
         row = (name, round(occ, 4), lv, st["num_tiles"],

@@ -45,9 +45,7 @@ def main():
 
     # --- graph parallel: vertex partition over 'model' --------------------
     mesh2 = jax.make_mesh((2, 4), ("data", "model"))
-    e = g.num_edges
-    g2 = csr.from_edges(np.asarray(g.src)[:e], np.asarray(g.dst)[:e],
-                        np.asarray(g.prob)[:e], g.num_vertices, dedupe=True)
+    g2 = csr.dedupe(g)
     ptg = partition.partition(tiles.from_graph(g2), num_shards=4)
     st = traversal.random_starts(jax.random.key(9), g2.num_vertices, C)
     vis_gp, levels = dtrav.graph_parallel_traversal(ptg, st, C, 11, mesh2)

@@ -29,9 +29,24 @@ if grep -rn "sample_batch(" src benchmarks examples --include='*.py' \
     exit 1
 fi
 
+# Graph-parallel serving smoke: the 2-D (data × model) mesh path end to
+# end on forced host devices — pool build with the graph row-partitioned,
+# bit-identity vs the dense pool, elastic restore, refresh.  One IC and one
+# LT run (each is a separate process, so the forced device count never
+# leaks into the pytest run).
+graph_parallel_smoke() {
+    python -m repro.launch.serve_influence --smoke --mesh 2x4 \
+        --sampler-backend graph_parallel
+    python -m repro.launch.serve_influence --smoke --mesh 2x2 \
+        --diffusion lt       # M>1 defaults to graph_parallel
+}
+
 if python -m pip install -e . ; then
     python -m pytest -x -q
+    graph_parallel_smoke
 else
     echo "[ci] pip install failed; running from source tree" >&2
-    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q
+    export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+    python -m pytest -x -q
+    graph_parallel_smoke
 fi

@@ -64,7 +64,7 @@ class SamplingDriver:
         self.spec = sampling.resolve_spec(spec, sample_kw,
                                           num_colors=num_colors,
                                           master_seed=master_seed)
-        if self.spec.backend == "data_parallel":
+        if self.spec.backend in ("data_parallel", "graph_parallel"):
             raise ValueError(
                 "SamplingDriver parallelizes across worker threads, not a "
                 "mesh — use a dense/tiled/kernel spec here, or build the "

@@ -5,6 +5,10 @@ edge-centric path) but expansion goes through the tile formulation — either
 the Pallas kernel (``use_kernel=True``) or its pure-jnp oracle.  Because all
 three paths share the counter RNG keyed by *CSR edge id*, their visited masks
 are bit-for-bit identical; tests rely on it.
+
+``run_fused_lt_tiled`` is the LT analogue: the same tile sweep with the
+per-(edge, color) Bernoulli replaced by the fixed LT live-edge selection
+(`kernels.ref.lt_select_expand_ref`), bit-identical to ``lt.run_fused_lt``.
 """
 from __future__ import annotations
 
@@ -17,6 +21,42 @@ from repro.core import bitmask, tiles
 from repro.core.traversal import init_frontier
 from repro.kernels import fused_expand as fe
 from repro.kernels import ref as kref
+
+
+@partial(jax.jit, static_argnames=("num_colors", "max_levels"))
+def run_fused_lt_tiled(tg: tiles.TiledGraph, cb_tiles, starts,
+                       num_colors: int, seed, max_levels: int = 64):
+    """LT fused traversal on the block-sparse tile layout.
+
+    Expansion goes through `kernels.ref.lt_select_expand_ref` — the fixed
+    live-edge selection recomputed per level from the counter hash — so the
+    visited mask is bit-for-bit identical to `lt.run_fused_lt` on the same
+    (LT-normalized) graph.  ``cb_tiles`` is the selection-CDF prefix in tile
+    layout (``tiles.edge_values_to_tiles(tg, lt.selection_cum_before(g))``).
+    Returns (visited (V, W) uint32, levels_run int32).
+    """
+    vp = tg.padded_vertices
+    frontier = tiles.pad_mask_rows(
+        init_frontier(tg.num_vertices, num_colors, starts), vp)
+    visited = jnp.zeros_like(frontier)
+    # Selection uniforms are level-independent: ONE table per traversal.
+    u = kref.lt_selection_uniforms(jnp.uint32(seed), vp, num_colors)
+
+    def cond(carry):
+        fr, _, level = carry
+        return jnp.logical_and(bitmask.any_set(fr), level < max_levels)
+
+    def body(carry):
+        fr, vis, level = carry
+        vis = vis | fr
+        nf = kref.lt_select_expand_ref(tg.prob, cb_tiles, tg.tile_src,
+                                       tg.tile_dst, fr, vis, u)
+        return nf, vis, level + 1
+
+    frontier, visited, levels = jax.lax.while_loop(
+        cond, body, (frontier, visited, jnp.int32(0)))
+    visited = visited | frontier                         # cap-level colors
+    return visited[: tg.num_vertices], levels
 
 
 @partial(jax.jit, static_argnames=("num_colors", "max_levels", "use_kernel",

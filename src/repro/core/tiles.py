@@ -127,6 +127,19 @@ def from_graph(g: Graph, tile_size: int = TILE,
         num_vertices=g.num_vertices, num_edges=e, tile_size=tile_size)
 
 
+def edge_values_to_tiles(tg: TiledGraph, values: np.ndarray,
+                         fill: float = 0.0) -> np.ndarray:
+    """Map per-CSR-edge ``values`` into the ``(nt, T, T)`` tile layout
+    (host-side).  Slot validity comes from ``prob > 0`` — empty slots share
+    ``edge_id`` 0 with the real edge 0, so they take ``fill`` instead of the
+    gathered value.  Used to carry per-edge side data (e.g. the LT
+    selection-CDF prefixes) alongside the tile stack."""
+    vals = np.asarray(values)
+    gathered = vals[np.asarray(tg.edge_id)]
+    return np.where(np.asarray(tg.prob) > 0, gathered,
+                    np.asarray(fill, vals.dtype)).astype(vals.dtype)
+
+
 def tile_stats(tg: TiledGraph) -> dict:
     """Reordering benchmark metrics (Fig. 5 analogue, TPU cost model)."""
     nblocks = tg.padded_vertices // tg.tile_size

@@ -11,7 +11,14 @@ Two orthogonal axes, composable on one mesh:
   expands only locally-owned tiles — the collective-bound cell of the
   roofline analysis.
 
-Both paths reuse the exact single-device expansion math (coupled RNG), so
+``graph_parallel_block`` composes the two on ONE mesh: batches sharded over
+``data``, rows over ``model``, every collective naming only the model axis
+— the program behind the `repro.sampling` ``graph_parallel`` backend (IC
+and LT; LT derives its live-edge selection shard-locally from global
+destination ids — one local-rows-sized uniform table per traversal — so
+no (E, W) selection mask is ever replicated).
+
+All paths reuse the exact single-device expansion math (coupled RNG), so
 distributed results are bit-for-bit equal to single-device runs; tests
 assert this under a forced multi-device host platform.
 """
@@ -120,14 +127,12 @@ def distributed_greedy_max_cover(visited: jnp.ndarray, k: int,
 
 
 # ------------------------------------------------------------- graph parallel
-def _graph_parallel_body(ptg: part_lib.PartitionedTiledGraph,
-                         frontier_local, *, seed, max_levels: int, axis: str):
-    """shard_map body: level loop with per-level frontier all-gather."""
-
-    def expand_local(fr_global, vis_local, level):
-        return kref.fused_expand_ref(
-            ptg.prob[0], ptg.edge_id[0], ptg.tile_src[0], ptg.tile_dst[0],
-            fr_global, vis_local, seed, level)
+def _frontier_gather_loop(expand, frontier_local, max_levels: int, axis: str):
+    """THE graph-parallel level loop: per-level frontier all-gather over
+    ``axis``, local expansion, psum-agreed termination.  ``expand`` maps
+    (fr_global (Vp, W), vis_local (rows, W), level) → new local frontier.
+    Returns (visited_local, levels).  Every collective names only ``axis``,
+    so data-sharded batches run their loops independently on one mesh."""
 
     def cond(carry):
         fr, _, lvl = carry
@@ -140,13 +145,40 @@ def _graph_parallel_body(ptg: part_lib.PartitionedTiledGraph,
         vis = vis | fr
         # THE collective: gather every shard's (rows, W) frontier words.
         fr_global = jax.lax.all_gather(fr, axis, tiled=True)
-        nf = expand_local(fr_global, vis, lvl.astype(jnp.uint32))
+        nf = expand(fr_global, vis, lvl.astype(jnp.uint32))
         return nf, vis, lvl + 1
 
     visited = jnp.zeros_like(frontier_local)
     fr, vis, lvl = jax.lax.while_loop(
         cond, body, (frontier_local, visited, jnp.int32(0)))
     return vis | fr, lvl
+
+
+def _local_expand(ptg_local, diffusion: str, cb_local, seed, dst_block_base,
+                  num_colors: int):
+    """Per-shard expansion closure over the shard's (leading-dim-1) tile
+    stacks: IC draws per-(edge, color, level) Bernoullis keyed by CSR edge
+    id; LT derives the fixed live-edge selection from GLOBAL destination
+    vertex ids (``dst_block_base`` rebases the shard's local blocks), with
+    the level-independent uniform table built ONCE here — before the level
+    loop — and reused by every level's expansion."""
+    if diffusion == "lt":
+        rows = ptg_local.blocks_per_shard * ptg_local.tile_size
+        u = kref.lt_selection_uniforms(
+            seed, rows, num_colors,
+            row_base=dst_block_base * ptg_local.tile_size)
+
+        def expand(fr_global, vis_local, level):
+            return kref.lt_select_expand_ref(
+                ptg_local.prob[0], cb_local[0], ptg_local.tile_src[0],
+                ptg_local.tile_dst[0], fr_global, vis_local, u)
+    else:
+        def expand(fr_global, vis_local, level):
+            return kref.fused_expand_ref(
+                ptg_local.prob[0], ptg_local.edge_id[0],
+                ptg_local.tile_src[0], ptg_local.tile_dst[0],
+                fr_global, vis_local, seed, level)
+    return expand
 
 
 def graph_parallel_traversal(ptg: part_lib.PartitionedTiledGraph,
@@ -164,19 +196,83 @@ def graph_parallel_traversal(ptg: part_lib.PartitionedTiledGraph,
         init_frontier(ptg.num_vertices, num_colors, starts), vp)
     seed = jnp.uint32(seed)
 
-    tile_specs = part_lib.PartitionedTiledGraph(
-        prob=P(axis), edge_id=P(axis), tile_src=P(axis), tile_dst=P(axis),
-        first_of_dst=P(axis),
-        num_vertices=ptg.num_vertices, num_edges=ptg.num_edges,
-        tile_size=ptg.tile_size, num_shards=ptg.num_shards,
-        blocks_per_shard=ptg.blocks_per_shard)
+    def body(ptg_local, frontier_local):
+        base = (jax.lax.axis_index(axis).astype(jnp.int32)
+                * ptg_local.blocks_per_shard)
+        expand = _local_expand(ptg_local, "ic", None, seed, base,
+                               num_colors)
+        return _frontier_gather_loop(expand, frontier_local, max_levels, axis)
 
     fn = shard_map(
-        partial(_graph_parallel_body, seed=seed, max_levels=max_levels,
-                axis=axis),
-        mesh=mesh,
-        in_specs=(tile_specs, P(axis)),
+        body, mesh=mesh,
+        in_specs=(part_lib.partition_specs(ptg, axis), P(axis)),
         out_specs=(P(axis), P()),
         check=False)
     visited, levels = jax.jit(fn)(ptg, frontier)
     return visited[: ptg.num_vertices], levels
+
+
+def graph_parallel_block(ptg: part_lib.PartitionedTiledGraph, mesh: Mesh, *,
+                         data_axis: str = "data", model_axis: str = "model",
+                         num_colors: int, max_levels: int = 64,
+                         diffusion: str = "ic"):
+    """Build the 2-D (data × model) fused-BPT block program.
+
+    The composition the `repro.sampling` ``graph_parallel`` backend runs:
+    a block of B independent batches is sharded over ``data_axis`` while
+    the graph's destination rows are sharded over ``model_axis`` — every
+    device holds only its (batch slice × row slice), per-level collectives
+    (frontier all-gather + termination psum) name ONLY the model axis, so
+    data shards traverse their batch slices fully independently.
+
+    Returns a jitted ``fn(ptg, starts, seeds)`` (IC) or
+    ``fn(ptg, cb_tiles, starts, seeds)`` (LT, ``cb_tiles`` =
+    `partition_tile_values` of the selection-CDF prefixes) mapping
+    starts (B, C) int32 / seeds (B,) uint32, both sharded ``P(data_axis)``,
+    to visited (B, Vp, W) uint32 sharded ``P(data_axis, model_axis)``.
+    B must be a multiple of the data-axis size (callers pad).
+
+    The tile stacks are runtime ARGUMENTS (closing over them would bake
+    them into the jit program as replicated constants, defeating the row
+    partition) — but the program's slice offsets/row counts come from the
+    BUILD-time ``ptg``, so the value passed at call time must be that same
+    partition (the `repro.sampling` sampler caches exactly one and binds
+    both sides; rebuild the program if you re-partition).
+    """
+    from repro.distributed.compat import shard_map
+
+    v, vp = ptg.num_vertices, ptg.padded_vertices
+    rows, tile = ptg.rows_per_shard, ptg.tile_size
+    tile_specs = part_lib.partition_specs(ptg, model_axis)
+
+    def block_body(ptg_local, cb_local, starts_local, seeds_local):
+        base = (jax.lax.axis_index(model_axis).astype(jnp.int32)
+                * ptg_local.blocks_per_shard)
+
+        def one(starts, seed):
+            # Full (Vp, W) frontier is a transient; persistent state is the
+            # (rows, W) local slice each shard keeps through the loop.
+            fr = tiles.pad_mask_rows(init_frontier(v, num_colors, starts), vp)
+            fr_local = jax.lax.dynamic_slice_in_dim(fr, base * tile, rows)
+            expand = _local_expand(ptg_local, diffusion, cb_local, seed,
+                                   base, num_colors)
+            vis, _ = _frontier_gather_loop(expand, fr_local, max_levels,
+                                           model_axis)
+            return vis
+
+        # Sequential over the shard's local batch slice: one traversal's
+        # transients at a time per device, parallel across data shards.
+        return jax.lax.map(lambda a: one(*a), (starts_local, seeds_local))
+
+    if diffusion == "lt":
+        fn = shard_map(
+            block_body, mesh=mesh,
+            in_specs=(tile_specs, P(model_axis), P(data_axis), P(data_axis)),
+            out_specs=P(data_axis, model_axis), check=False)
+    else:
+        fn = shard_map(
+            lambda ptg_l, st, sd: block_body(ptg_l, None, st, sd),
+            mesh=mesh,
+            in_specs=(tile_specs, P(data_axis), P(data_axis)),
+            out_specs=P(data_axis, model_axis), check=False)
+    return jax.jit(fn)

@@ -82,6 +82,20 @@ def from_edges(src: np.ndarray, dst: np.ndarray, prob: np.ndarray,
     )
 
 
+def dedupe(g: Graph) -> Graph:
+    """``g`` rebuilt with parallel (src, dst) edges union-merged.
+
+    THE way to get the dedupe-clean graph the tile-layout sampler backends
+    (tiled/kernel/graph_parallel) require; using the result for EVERY
+    backend keeps the facade's cross-backend bit-identity contract — one
+    shared edge list, one set of CSR edge ids.  Idempotent, and drops any
+    prob-0 edge padding (a merged edge list has its own CSR order).
+    """
+    e = g.num_edges
+    return from_edges(np.asarray(g.src)[:e], np.asarray(g.dst)[:e],
+                      np.asarray(g.prob)[:e], g.num_vertices, dedupe=True)
+
+
 def transpose(g: Graph) -> Graph:
     """Reverse every edge — RRR sets run the diffusion backwards (Def. 2)."""
     src = np.asarray(g.dst)[: g.num_edges]

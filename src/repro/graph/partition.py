@@ -9,6 +9,13 @@ rows; sources arrive via an all-gather of the frontier each level).
 
 All shards carry identical array shapes (tile lists padded to the max shard
 count with inert prob-0 tiles) so the stack can live under one shard_map.
+
+The shard assignment is a pure function of ``(tg, num_shards)``
+(`_assignment`), so per-tile side arrays — e.g. the LT selection-CDF
+prefixes — partition into the *same* stacked layout via
+`partition_tile_values` and ride alongside the graph under one shard_map.
+Callers (the `repro.sampling` ``graph_parallel`` backend) compute the
+partition ONCE and cache it on the sampler; every batch reuses it.
 """
 from __future__ import annotations
 
@@ -45,22 +52,27 @@ class PartitionedTiledGraph:
         return self.blocks_per_shard * self.tile_size
 
 
-def partition(tg: tiles.TiledGraph, num_shards: int) -> PartitionedTiledGraph:
-    """Split a TiledGraph into ``num_shards`` destination-row shards."""
+def _assignment(tg: tiles.TiledGraph, num_shards: int):
+    """(shard_of (nt,), blocks_per_shard, tiles_per_shard) — THE shard
+    assignment both `partition` and `partition_tile_values` follow."""
     T = tg.tile_size
     n_blocks_raw = -(-tg.num_vertices // T)
     nb_loc = -(-n_blocks_raw // num_shards)
-    n_blocks = nb_loc * num_shards
+    shard_of = np.asarray(tg.tile_dst) // nb_loc
+    counts = np.bincount(shard_of, minlength=num_shards)
+    return shard_of, nb_loc, max(int(counts.max()), 1)
+
+
+def partition(tg: tiles.TiledGraph, num_shards: int) -> PartitionedTiledGraph:
+    """Split a TiledGraph into ``num_shards`` destination-row shards."""
+    T = tg.tile_size
+    shard_of, nb_loc, nt_max = _assignment(tg, num_shards)
 
     t_src = np.asarray(tg.tile_src)
     t_dst = np.asarray(tg.tile_dst)
     prob = np.asarray(tg.prob)
     eid = np.asarray(tg.edge_id)
     first = np.asarray(tg.first_of_dst)
-
-    shard_of = t_dst // nb_loc
-    counts = np.bincount(shard_of, minlength=num_shards)
-    nt_max = max(int(counts.max()), 1)
 
     P = np.zeros((num_shards, nt_max, T, T), np.float32)
     E = np.zeros((num_shards, nt_max, T, T), np.uint32)
@@ -90,3 +102,32 @@ def partition(tg: tiles.TiledGraph, num_shards: int) -> PartitionedTiledGraph:
         first_of_dst=jnp.asarray(FI),
         num_vertices=tg.num_vertices, num_edges=tg.num_edges,
         tile_size=T, num_shards=num_shards, blocks_per_shard=nb_loc)
+
+
+def partition_tile_values(tg: tiles.TiledGraph, num_shards: int,
+                          tile_values: np.ndarray) -> np.ndarray:
+    """Scatter a per-tile ``(nt, ...)`` side array into the ``(S, ntₘ, ...)``
+    stacked layout of ``partition(tg, num_shards)`` (same shard assignment,
+    same within-shard tile order; padding slots are zero — inert alongside
+    the prob-0 padding tiles)."""
+    shard_of, _, nt_max = _assignment(tg, num_shards)
+    vals = np.asarray(tile_values)
+    out = np.zeros((num_shards, nt_max) + vals.shape[1:], vals.dtype)
+    for s in range(num_shards):
+        idx = np.flatnonzero(shard_of == s)
+        if len(idx):
+            out[s, : len(idx)] = vals[idx]
+    return out
+
+
+def partition_specs(ptg: PartitionedTiledGraph, axis: str):
+    """The shard_map ``in_specs`` pytree for a partitioned graph: every tile
+    stack sharded over ``axis`` on its leading (shard) dim, statics copied
+    so the spec tree matches the value tree."""
+    from jax.sharding import PartitionSpec as P
+    return PartitionedTiledGraph(
+        prob=P(axis), edge_id=P(axis), tile_src=P(axis), tile_dst=P(axis),
+        first_of_dst=P(axis),
+        num_vertices=ptg.num_vertices, num_edges=ptg.num_edges,
+        tile_size=ptg.tile_size, num_shards=ptg.num_shards,
+        blocks_per_shard=ptg.blocks_per_shard)

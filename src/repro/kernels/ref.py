@@ -12,6 +12,38 @@ import jax.numpy as jnp
 from repro.core import bitmask, rng
 
 
+def _tile_expand(gate_fn, gate_args, tile_src, tile_dst, frontier, visited):
+    """Shared tile-expansion scaffolding for the traversal oracles:
+
+        out[dst] = OR over tiles( OR_src(frontier[src] & gate) ) & ~visited[dst]
+
+    ``gate_fn((per-tile arrays), td) -> (T, T, W)`` packed gate words — the
+    IC Bernoulli draw or the LT live-edge selection; ``gate_args`` is a
+    tuple of (nt, T, T) arrays vmapped alongside tile_src/tile_dst.  One
+    scaffolding, so IC and LT can never diverge on the reshape / OR-reduce
+    / scatter-max mechanics the kernel tests pin down.
+    """
+    T = gate_args[0].shape[1]
+    W = frontier.shape[1]
+    n_blocks = visited.shape[0] // T
+    fr_blocks = frontier.reshape(-1, T, W)
+    vis_blocks = visited.reshape(n_blocks, T, W)
+
+    def one_tile(args, ts, td):
+        F = fr_blocks[ts]                                   # (T, W)
+        V = vis_blocks[td]                                  # (T, W)
+        x = F[:, None, :] & gate_fn(args, td)               # (T, T, W)
+        contrib = jax.lax.reduce(x, jnp.uint32(0),
+                                 jnp.bitwise_or, (0,))      # (T, W) per dst
+        return contrib & ~V
+
+    contribs = jax.vmap(one_tile)(gate_args, tile_src, tile_dst)  # (nt,T,W)
+    out = jnp.zeros_like(visited).reshape(n_blocks, T, W)
+    out = bitmask.pack_bits(
+        bitmask.unpack_bits(out).at[tile_dst].max(bitmask.unpack_bits(contribs)))
+    return out.reshape(-1, W)
+
+
 def fused_expand_ref(prob, edge_id, tile_src, tile_dst, frontier, visited,
                      seed, level):
     """Oracle for kernels.fused_expand — one level of tile-based expansion.
@@ -29,30 +61,75 @@ def fused_expand_ref(prob, edge_id, tile_src, tile_dst, frontier, visited,
       next_frontier (Vo, W) uint32 = OR over tiles of
         OR_i( frontier[src_i] & Bernoulli_word(edge) ) & ~visited[dst]
     """
-    T = prob.shape[1]
     W = frontier.shape[1]
-    n_blocks = visited.shape[0] // T
-    fr_blocks = frontier.reshape(-1, T, W)
-    vis_blocks = visited.reshape(n_blocks, T, W)
 
-    def one_tile(p, eid, ts, td):
-        F = fr_blocks[ts]                                   # (T, W)
-        V = vis_blocks[td]                                  # (T, W)
+    def gate(args, td):
+        p, eid = args
         word_ids = jnp.arange(W, dtype=jnp.uint32)
         # (T, T, W): Bernoulli word for every (src-lane, dst-lane, word).
-        rand = jax.vmap(
+        return jax.vmap(
             lambda w: rng.bernoulli_word(seed, level, eid, w, p),
             out_axes=-1)(word_ids)
-        x = F[:, None, :] & rand                            # (T, T, W)
-        contrib = jax.lax.reduce(x, jnp.uint32(0),
-                                 jnp.bitwise_or, (0,))      # (T, W) per dst
-        return contrib & ~V
 
-    contribs = jax.vmap(one_tile)(prob, edge_id, tile_src, tile_dst)  # (nt,T,W)
-    out = jnp.zeros_like(visited).reshape(n_blocks, T, W)
-    out = bitmask.pack_bits(
-        bitmask.unpack_bits(out).at[tile_dst].max(bitmask.unpack_bits(contribs)))
-    return out.reshape(-1, W)
+    return _tile_expand(gate, (prob, edge_id), tile_src, tile_dst,
+                        frontier, visited)
+
+
+def lt_selection_uniforms(seed, num_rows: int, num_colors: int, row_base=0):
+    """(num_rows, W·32) f32 LT selection uniforms ``u(dst, color)`` — the
+    same (seed, 0x17, dst, color) counters as `lt.selection_mask_from_cb`,
+    one per (destination vertex, color lane).  Level-independent, so
+    callers compute this ONCE per traversal and reuse it across every level
+    and tile (tiles sharing a destination block would otherwise redo
+    identical hash work).  ``row_base`` is the global vertex id of row 0 —
+    0 single-device, ``shard · rows_per_shard`` under a graph-parallel row
+    partition (the hash needs GLOBAL ids).  Lanes pad to full words like
+    the dense path; padded lanes never meet a live frontier bit."""
+    seed = jnp.asarray(seed, jnp.uint32)
+    dstv = (row_base + jnp.arange(num_rows, dtype=jnp.int32)) \
+        .astype(jnp.uint32)
+    lanes = jnp.arange(bitmask.num_words(num_colors) * 32, dtype=jnp.uint32)
+    return rng.uniform_from_u32(
+        rng.hash_u32(seed, jnp.uint32(0x17), dstv[:, None], lanes[None, :]))
+
+
+def lt_select_expand_ref(prob, cb, tile_src, tile_dst, frontier, visited, u):
+    """One level of tile-based expansion under the LT live-edge selection.
+
+    Same tile formulation as `fused_expand_ref`, but the per-(edge, color)
+    Bernoulli gate is replaced by the fixed LT selection (`core.lt`): edge
+    ``(src, dst)`` carries color ``c`` iff ``cb ≤ u(dst, c) < cb + prob``
+    — bit-identical to the dense `lt.selection_mask_from_cb` sweep without
+    materializing the (E, W) selection mask.
+
+    Args:
+      prob:     (nt, T, T) f32 LT-normalized in-weights (0 ⇒ no edge).
+      cb:       (nt, T, T) f32 selection-CDF prefix per edge slot
+                (`tiles.edge_values_to_tiles` of `lt.selection_cum_before`).
+      tile_src: (nt,) i32 source block per tile (indexes ``frontier``).
+      tile_dst: (nt,) i32 destination block per tile (indexes ``visited``).
+      frontier: (Vf, W) uint32 packed color mask (padded rows).
+      visited:  (Vo, W) uint32 — ALREADY folded with the current frontier.
+                Vo == Vf single-device; Vo = shard rows graph-parallel.
+      u:        (Vo, W·32) f32 from `lt_selection_uniforms` — rows aligned
+                with ``visited``, computed once per traversal by the caller.
+    """
+    T = prob.shape[1]
+    u_blocks = u.reshape(-1, T, u.shape[1])
+
+    def gate(args, td):
+        p, cbt = args
+        U = u_blocks[td]                                    # (T_dst, W·32)
+        # One broadcast compare for every (src, dst, color) at once —
+        # colors group row-major into words, lane c%32 = bit c%32, exactly
+        # the per-lane packing order of the dense path.
+        sel = jnp.logical_and(U[None, :, :] >= cbt[:, :, None],
+                              U[None, :, :] < (cbt + p)[:, :, None])
+        return rng.pack_bool_word(
+            sel.reshape(T, T, -1, 32))                      # (T, T, W)
+
+    return _tile_expand(gate, (prob, cb), tile_src, tile_dst,
+                        frontier, visited)
 
 
 def cover_counts_ref(visited, active):

@@ -4,12 +4,17 @@
     python -m repro.launch.serve_influence --smoke --diffusion lt
     python -m repro.launch.serve_influence --smoke --sampler-backend kernel
     python -m repro.launch.serve_influence --smoke --mesh 8x1 --async
+    python -m repro.launch.serve_influence --smoke --mesh 2x4 \
+        --sampler-backend graph_parallel
 
 ``--diffusion ic|lt`` and ``--sampler-backend dense|tiled|kernel|
-data_parallel`` select the `repro.sampling.SamplerSpec` the pool samples
-under (backend defaults: ``dense`` single-device, ``data_parallel`` on a
-mesh — the shard_map path that builds every shard's slots on that shard's
-own devices).
+data_parallel|graph_parallel`` select the `repro.sampling.SamplerSpec` the
+pool samples under.  Backend defaults: ``dense`` single-device; on a
+``--mesh DxM`` mesh, ``data_parallel`` when M == 1 (shard_map batch blocks,
+each shard's slots built on its own devices) and **graph parallelism when
+M > 1**: the graph's destination rows shard over the ``model`` axis (size
+M), batches over ``data`` (size D), with a frontier all-gather per level —
+the regime for graphs too big for one device.
 
 Single-device smoke exercises the full pool lifecycle on a synthetic
 graph: sample → serve a mixed micro-batched query load (top-k, σ(S),
@@ -78,10 +83,7 @@ def build_graph(args):
     # facade's cross-backend bit-identity contract — the same CLI args
     # must sample the same bits whether the backend is dense or kernel
     # (a pool saved under one must refresh identically under another).
-    e = g.num_edges
-    return csr.from_edges(np.asarray(g.src)[:e], np.asarray(g.dst)[:e],
-                          np.asarray(g.prob)[:e], g.num_vertices,
-                          dedupe=True)
+    return csr.dedupe(g)
 
 
 def build_config(args, *, backend: str | None = None) -> PoolConfig:
@@ -138,9 +140,9 @@ def _print_mixed(tag, args, tickets, results, dispatches, dt):
 # ------------------------------------------------------------ single device
 def run_single(args) -> None:
     t0 = time.time()
-    if args.sampler_backend == "data_parallel":
-        raise SystemExit("--sampler-backend data_parallel needs a mesh; "
-                         "add --mesh DxM")
+    if args.sampler_backend in ("data_parallel", "graph_parallel"):
+        raise SystemExit(f"--sampler-backend {args.sampler_backend} needs "
+                         "a mesh; add --mesh DxM (M>1 for graph_parallel)")
     store = build_store(args)
     print(f"[serve_influence] pool: {len(store.batches)} batches × "
           f"{store.num_colors} colors = {store.num_samples} RRR sets "
@@ -220,18 +222,23 @@ def run_distributed(args, shape: tuple[int, int]) -> None:
     if jax.device_count() < d * m:
         raise SystemExit(f"mesh {d}x{m} wants {d * m} devices, have "
                          f"{jax.device_count()}")
+    # Mesh backend defaults: data_parallel shards batch blocks; M > 1
+    # activates graph parallelism — rows over 'model', batches over 'data'.
+    backend = args.sampler_backend or \
+        ("graph_parallel" if m > 1 else "data_parallel")
+    if backend == "graph_parallel" and m < 2:
+        raise SystemExit("--sampler-backend graph_parallel wants a model "
+                         f"axis: use --mesh DxM with M>1 (got {d}x{m})")
     mesh = jax.make_mesh((d, m), ("data", "model")) if m > 1 else \
         jax.make_mesh((d,), ("data",))
     g = build_graph(args)
-    # On a mesh the sampler defaults to data_parallel: ensure()/refresh()
-    # traverse whole batch blocks via shard_map, each shard's slots built
-    # on that shard's own devices.
-    cfg = build_config(args, backend=args.sampler_backend or "data_parallel")
+    cfg = build_config(args, backend=backend)
     store = ShardedSketchStore(g, cfg, mesh)
     store.ensure(args.batches)
+    layout = f"data={d}" + (f" × model={m}" if m > 1 else "")
     print(f"[serve_influence] sharded pool: {len(store.batches)} batches × "
           f"{store.num_colors} colors over {store.num_shards} shards "
-          f"(axis 'data' of {d}x{m} mesh; "
+          f"({layout} mesh; "
           f"{store.bytes_per_batch * store.padded_batches / store.num_shards / 2**20:.2f} "
           f"MiB/device, capacity {store.capacity} batches; diffusion "
           f"{store.spec.diffusion!r}, backend {store.spec.backend!r})")
@@ -248,8 +255,9 @@ def run_distributed(args, shape: tuple[int, int]) -> None:
             _async_demo(args, engine)
         return
 
-    # ---- sharded ≡ single-device, bit for bit (and, with the default
-    # data_parallel backend, shard_map block builds ≡ dense per-batch)
+    # ---- sharded ≡ single-device, bit for bit (and, with a mesh backend
+    # — data_parallel block builds or graph_parallel row-partitioned
+    # traversals — distributed sampling ≡ dense per-batch)
     single = SketchStore(g, dense_variant(cfg))
     single.ensure(len(store.batches))
     ref = QueryEngine(single)
@@ -352,9 +360,12 @@ def main():
     ap.add_argument("--diffusion", choices=("ic", "lt"), default="ic",
                     help="diffusion model the pool samples under")
     ap.add_argument("--sampler-backend", default=None,
-                    choices=("dense", "tiled", "kernel", "data_parallel"),
-                    help="traversal backend (default: dense single-device, "
-                         "data_parallel on a mesh)")
+                    choices=("dense", "tiled", "kernel", "data_parallel",
+                             "graph_parallel"),
+                    help="traversal backend (default: dense single-device; "
+                         "on a --mesh DxM: data_parallel when M==1, "
+                         "graph_parallel — rows sharded over the model "
+                         "axis — when M>1)")
     ap.add_argument("--n", type=int, default=300)
     ap.add_argument("--degree", type=float, default=6.0)
     ap.add_argument("--prob", type=float, default=0.25)

@@ -9,6 +9,11 @@
     batch   = sampler.sample(0)                  # one rrr.RRRBatch
     stack   = sampler.sample_stacked(range(16))  # (16, V, W), mesh-sharded
 
+    # graphs bigger than one device: rows over "model", batches over "data"
+    gp = sampling.make_sampler(
+        graph, spec.replace(backend="graph_parallel"),
+        mesh=jax.make_mesh((4, 2), ("data", "model")))
+
 Every pool consumer (``core.rrr.sample_collection``, ``core.imm.run_imm``,
 ``serve.influence.SketchStore``, ``serve.distributed.ShardedSketchStore``,
 ``core.driver.SamplingDriver``) routes RRR sampling through here; the

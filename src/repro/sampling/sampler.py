@@ -16,7 +16,8 @@ Backends:
                        `core.lt.run_fused_lt`), one batch per call on the
                        default device.
 * ``tiled``          — block-sparse tile expansion, pure-jnp oracle
-                       (`core.tiled_traversal.run_fused_tiled`).  IC only.
+                       (`core.tiled_traversal.run_fused_tiled`; LT via
+                       `run_fused_lt_tiled`).
 * ``kernel``         — same tile layout through the Pallas ``fused_expand``
                        kernel.  IC only.
 * ``data_parallel``  — batch *blocks* over a mesh axis via ``shard_map``:
@@ -25,6 +26,14 @@ Backends:
                        — pool builds parallelize across the mesh instead of
                        staging one batch at a time through the default
                        device (the ROADMAP's distributed-sampling item).
+* ``graph_parallel`` — the graph itself partitioned: destination rows shard
+                       over ``spec.model_axis`` (1-D tile partition, cached
+                       on the sampler), batch blocks over ``spec.mesh_axis``
+                       — so graphs bigger than one device's memory sample
+                       at all, and sample parallelism still composes on the
+                       same 2-D (data × model) mesh.  Per-level collectives
+                       (frontier all-gather + termination psum) name only
+                       the model axis.
 
 LT diffusion: the facade owns live-edge weight normalization
 (`lt.normalize_lt_weights`, idempotent) on the reversed graph, so consumers
@@ -36,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lt, rrr, tiles
+from repro.core import lt, rrr, tiled_traversal, tiles
 from repro.graph import csr
 from repro.sampling.spec import SamplerSpec
 
@@ -85,6 +94,21 @@ class Sampler:
         """(B, V, W) stacked visited masks for the given batch indices."""
         return rrr.stack_visited(self.sample_many(batch_indices))
 
+    # ------------------------------------------------- mesh-backend shared
+    def _block_inputs(self, idx: list[int], shards: int):
+        """(padded_len, starts (Bp, C), seeds (Bp,)) for a block padded to a
+        multiple of ``shards`` with repeats of the last index (identical
+        work, result dropped).  Roots come from the EXACT scalar
+        ``jax.random.key(...)`` path the dense backend uses — the
+        cross-backend bit-identity contract — so they are derived per batch
+        and stacked ((B, C) ints, cheap next to the (B, V, W) traversal);
+        seeds are pure uint32 arithmetic and vectorize host-side."""
+        padded = -(-len(idx) // shards) * shards
+        full = idx + [idx[-1]] * (padded - len(idx))
+        starts = jnp.stack([self.batch_starts(b) for b in full])
+        seeds = jnp.asarray(rrr.batch_seeds(self.spec.master_seed, full))
+        return padded, starts, seeds
+
 
 class DenseSampler(Sampler):
     """CSR edge-centric path — IC and LT."""
@@ -96,26 +120,44 @@ class DenseSampler(Sampler):
             max_levels=self.spec.max_iters, model=self.spec.diffusion)
 
 
+def _tile_graph(g_rev: csr.Graph, spec: SamplerSpec) -> tiles.TiledGraph:
+    """Tile layout of the reversed graph, with the shared dedupe diagnosis
+    (tile-layout backends need parallel edges merged)."""
+    try:
+        return tiles.from_graph(g_rev, tile_size=spec.tile_size)
+    except ValueError as e:
+        raise ValueError(
+            f"the {spec.backend!r} backend needs a dedupe-clean graph "
+            "(build it with csr.from_edges(..., dedupe=True)); "
+            f"tiling failed with: {e}") from e
+
+
 class TiledSampler(Sampler):
-    """Block-sparse tile path (jnp oracle or Pallas kernel) — IC only.
+    """Block-sparse tile path (jnp oracle or Pallas kernel).
 
     The tile layout is built once per sampler from the reversed graph; the
-    counter RNG is keyed by *CSR edge id*, so results stay bit-identical to
-    the dense path.  Requires a parallel-edge-free graph
+    counter RNG is keyed by *CSR edge id* (IC) / global destination vertex
+    (LT selection), so results stay bit-identical to the dense path.
+    Requires a parallel-edge-free graph
     (``csr.from_edges(..., dedupe=True)``)."""
 
     def __init__(self, g, spec, *, g_rev=None):
         super().__init__(g, spec, g_rev=g_rev)
-        try:
-            self.tg_rev = tiles.from_graph(self.g_rev,
-                                           tile_size=spec.tile_size)
-        except ValueError as e:
-            raise ValueError(
-                f"the {spec.backend!r} backend needs a dedupe-clean graph "
-                "(build it with csr.from_edges(..., dedupe=True)); "
-                f"tiling failed with: {e}") from e
+        self.tg_rev = _tile_graph(self.g_rev, spec)
+        # LT carries the selection-CDF prefixes alongside the tiles (the
+        # per-graph host precompute, done once like the layout itself).
+        self._cb_tiles = (jnp.asarray(tiles.edge_values_to_tiles(
+            self.tg_rev, lt.selection_cum_before(self.g_rev)))
+            if spec.diffusion == "lt" else None)
 
     def sample(self, batch_index: int) -> rrr.RRRBatch:
+        if self.spec.diffusion == "lt":
+            starts = self.batch_starts(batch_index)
+            visited, _ = tiled_traversal.run_fused_lt_tiled(
+                self.tg_rev, self._cb_tiles, starts, self.spec.num_colors,
+                self.batch_seed(batch_index), max_levels=self.spec.max_iters)
+            return rrr.RRRBatch(visited, np.asarray(starts),
+                                int(batch_index), -1, -1)
         return rrr.sample_batch(
             self.g_rev, self.spec.num_colors, self.spec.master_seed,
             int(batch_index), sort_starts=self.spec.sort_starts,
@@ -123,7 +165,42 @@ class TiledSampler(Sampler):
             use_kernel=(self.spec.backend == "kernel"))
 
 
-class DataParallelSampler(Sampler):
+class _BlockSampler(Sampler):
+    """Shared block protocol of the mesh backends: subclasses implement
+    ``_block(idx) -> (visited, roots)`` — visited ``(B, Vp≥V, W)`` sharded
+    on the subclass's mesh layout (row padding still attached for the
+    graph-parallel case), roots ``(B, C)`` host numpy."""
+
+    def _block(self, idx: list[int]):
+        raise NotImplementedError
+
+    def sample_stacked(self, batch_indices) -> jnp.ndarray:
+        """(B, V, W) visited for the block, mesh-sharded; any row padding
+        trimmed (an exact-fit block keeps its sharded layout untouched)."""
+        idx = [int(b) for b in batch_indices]
+        v = self.g_rev.num_vertices
+        if not idx:
+            return jnp.zeros((0, v, _num_words(self.spec.num_colors)),
+                             jnp.uint32)
+        vis = self._block(idx)[0]
+        return vis if vis.shape[1] == v else vis[:, :v]
+
+    def sample_many(self, batch_indices) -> list[rrr.RRRBatch]:
+        """Block-sample, then host-stage `RRRBatch`es (each device
+        contributes only its own slice of the block — the full block never
+        transits a single device).  Edge-visit stats carry the -1 "not
+        instrumented" sentinel, like the tiled and LT paths."""
+        idx = [int(b) for b in batch_indices]
+        if not idx:
+            return []
+        vis_sharded, roots = self._block(idx)
+        vis = np.asarray(jax.device_get(vis_sharded))
+        vis = vis[:, : self.g_rev.num_vertices]     # no-op when unpadded
+        return [rrr.RRRBatch(vis[i], roots[i], b, -1, -1)
+                for i, b in enumerate(idx)]
+
+
+class DataParallelSampler(_BlockSampler):
     """Batch blocks over a mesh axis via ``shard_map`` — IC and LT.
 
     A block of B batch indices is padded to the shard count and sharded
@@ -189,44 +266,13 @@ class DataParallelSampler(Sampler):
         """(visited, roots) for one padded block: visited (B, V, W) sharded
         ``P(axis)``, roots (B, C) host numpy — starts are derived once and
         shared by the traversal and the returned `RRRBatch` roots."""
-        s = self.num_shards
-        padded = -(-len(idx) // s) * s
-        # Pad with repeats of the last index: identical work, result dropped.
-        full = idx + [idx[-1]] * (padded - len(idx))
-        # Roots must come from the EXACT scalar jax.random.key(...) path the
-        # dense backend uses — the cross-backend bit-identity contract —
-        # so they are derived per batch and stacked ((B, C) ints, cheap
-        # next to the (B, V, W) traversal).  Seeds are pure uint32
-        # arithmetic and vectorize host-side.
-        starts = jnp.stack([self.batch_starts(b) for b in full])
-        seeds = jnp.asarray(rrr.batch_seeds(self.spec.master_seed, full))
+        padded, starts, seeds = self._block_inputs(idx, self.num_shards)
         vis = self._block_fn(padded)(starts, seeds)
         # Slicing a sharded array re-gathers; keep the P(axis) layout when
         # the block divides evenly (the pool-build case).
         if padded != len(idx):
             vis = vis[: len(idx)]
         return vis, np.asarray(starts)[: len(idx)]
-
-    def sample_stacked(self, batch_indices) -> jnp.ndarray:
-        """(B, V, W) visited for the block, sharded ``P(axis)`` over B."""
-        idx = [int(b) for b in batch_indices]
-        if not idx:
-            return jnp.zeros((0, self.g_rev.num_vertices,
-                              _num_words(self.spec.num_colors)), jnp.uint32)
-        return self._block(idx)[0]
-
-    def sample_many(self, batch_indices) -> list[rrr.RRRBatch]:
-        """Block-sample, then split into host-staged `RRRBatch`es (each
-        shard's slice is fetched from its own device — the full block never
-        transits a single device).  Edge-visit stats carry the -1 "not
-        instrumented" sentinel, like the tiled and LT paths."""
-        idx = [int(b) for b in batch_indices]
-        if not idx:
-            return []
-        vis_sharded, roots = self._block(idx)
-        vis = np.asarray(jax.device_get(vis_sharded))
-        return [rrr.RRRBatch(vis[i], roots[i], b, -1, -1)
-                for i, b in enumerate(idx)]
 
     def sample(self, batch_index: int) -> rrr.RRRBatch:
         """Single batch: go through the dense path — padding a 1-batch
@@ -239,6 +285,80 @@ class DataParallelSampler(Sampler):
         return self._dense.sample(batch_index)
 
 
+class GraphParallelSampler(_BlockSampler):
+    """Graph rows sharded over ``spec.model_axis``, batch blocks over
+    ``spec.mesh_axis`` — the 2-D (data × model) composition for graphs
+    bigger than one device's memory.  IC and LT.
+
+    The destination-row partition (`graph.partition.partition` of the tile
+    layout, plus the LT selection-CDF tiles) is computed ONCE here and
+    cached for the sampler's lifetime; every block reuses it.  Each device
+    persistently holds only its row slice of the tile stacks and, during a
+    block, its (batch slice × row slice) of the visited masks; the full
+    (V, W) mask of a batch only materializes when a consumer asks for it
+    (`sample_many` host-stages, which is exactly where `ShardedSketchStore`
+    wants the mask anyway).
+    """
+
+    def __init__(self, g, spec, mesh, *, g_rev=None):
+        super().__init__(g, spec, g_rev=g_rev)
+        if mesh is None:
+            raise ValueError("graph_parallel backend needs a mesh")
+        for ax, role in ((spec.mesh_axis, "mesh_axis (batches)"),
+                         (spec.model_axis, "model_axis (graph rows)")):
+            if ax not in mesh.axis_names:
+                raise ValueError(f"{role} {ax!r} not in mesh "
+                                 f"{mesh.axis_names}")
+        from repro.graph import partition as part_lib
+
+        self.mesh = mesh
+        self.data_axis = spec.mesh_axis
+        self.model_axis = spec.model_axis
+        tg = _tile_graph(self.g_rev, spec)
+        # Partition ONCE; cached — the whole point of binding a sampler.
+        self.ptg = part_lib.partition(tg, int(mesh.shape[spec.model_axis]))
+        self._cb_tiles = None
+        if spec.diffusion == "lt":
+            cb = tiles.edge_values_to_tiles(
+                tg, lt.selection_cum_before(self.g_rev))
+            self._cb_tiles = jnp.asarray(part_lib.partition_tile_values(
+                tg, self.ptg.num_shards, cb))
+        self._fn = None
+
+    @property
+    def data_shards(self) -> int:
+        return int(self.mesh.shape[self.data_axis])
+
+    def _block_fn(self):
+        if self._fn is None:
+            from repro.distributed.traversal import graph_parallel_block
+            self._fn = graph_parallel_block(
+                self.ptg, self.mesh, data_axis=self.data_axis,
+                model_axis=self.model_axis,
+                num_colors=self.spec.num_colors,
+                max_levels=self.spec.max_iters,
+                diffusion=self.spec.diffusion)
+        return self._fn
+
+    def _block(self, idx: list[int]):
+        """(visited (B, Vp, W) sharded P(data, model), roots (B, C) numpy)
+        for one padded block — row padding still attached."""
+        padded, starts, seeds = self._block_inputs(idx, self.data_shards)
+        args = ((self.ptg, self._cb_tiles, starts, seeds)
+                if self.spec.diffusion == "lt"
+                else (self.ptg, starts, seeds))
+        vis = self._block_fn()(*args)
+        if padded != len(idx):
+            vis = vis[: len(idx)]
+        return vis, np.asarray(starts)[: len(idx)]
+
+    def sample(self, batch_index: int) -> rrr.RRRBatch:
+        """Single batch through the SAME row-partitioned program (padding
+        replicates the batch across data shards — wasteful but the graph
+        never has to fit on one device, which is the backend's contract)."""
+        return self.sample_many([int(batch_index)])[0]
+
+
 def _num_words(num_colors: int) -> int:
     return -(-num_colors // 32)
 
@@ -249,8 +369,11 @@ def make_sampler(g: csr.Graph | None, spec: SamplerSpec, mesh=None, *,
 
     ``g_rev``: prebuilt transpose(g) (skips one reversal; for LT it may be
     raw or already LT-normalized — normalization is idempotent).  ``mesh``
-    is required by (and only used by) the ``data_parallel`` backend.
+    is required by (and only used by) the ``data_parallel`` and
+    ``graph_parallel`` backends.
     """
+    if spec.backend == "graph_parallel":
+        return GraphParallelSampler(g, spec, mesh, g_rev=g_rev)
     if spec.backend == "data_parallel":
         return DataParallelSampler(g, spec, mesh, g_rev=g_rev)
     if spec.backend in ("tiled", "kernel"):

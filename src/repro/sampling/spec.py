@@ -8,9 +8,12 @@ manifests.  The (diffusion × backend) support matrix:
     backend \\ diffusion |  ic  |  lt
     --------------------+------+------
     dense               |  ✓   |  ✓     CSR edge-centric sweep
-    tiled               |  ✓   |  ✗     block-sparse tiles, jnp oracle
+    tiled               |  ✓   |  ✓     block-sparse tiles, jnp oracle
     kernel              |  ✓   |  ✗     block-sparse tiles, Pallas kernel
     data_parallel       |  ✓   |  ✓     shard_map batch blocks over a mesh
+    graph_parallel      |  ✓   |  ✓     rows over ``model`` + batches over
+                                        ``data`` on a 2-D mesh (frontier
+                                        all-gather per level)
 
 The RNG contract every backend honors: batch ``b`` under ``master_seed`` is
 a pure function of ``(graph, master_seed, b)`` — the same ``(seed, starts)``
@@ -23,13 +26,15 @@ import dataclasses
 import warnings
 
 DIFFUSIONS = ("ic", "lt")
-BACKENDS = ("dense", "tiled", "kernel", "data_parallel")
+BACKENDS = ("dense", "tiled", "kernel", "data_parallel", "graph_parallel")
 
 # (diffusion, backend) pairs with an implementation behind them.  LT has no
-# tiled/Pallas expansion yet: its live-edge selection is per-(dst, color),
-# not per-(edge, color, level), so the IC expand kernel does not apply.
+# Pallas kernel yet: its live-edge selection is per-(dst, color), not
+# per-(edge, color, level), so the IC expand kernel does not apply — the
+# tiled jnp oracle (`kernels.ref.lt_select_expand_ref`) covers LT instead.
 _SUPPORTED = frozenset(
-    [("ic", b) for b in BACKENDS] + [("lt", "dense"), ("lt", "data_parallel")])
+    [("ic", b) for b in BACKENDS]
+    + [("lt", b) for b in BACKENDS if b != "kernel"])
 
 
 def supported(diffusion: str, backend: str) -> bool:
@@ -42,8 +47,12 @@ class SamplerSpec:
     """Complete description of one traversal-sampling configuration.
 
     ``max_iters`` is the level cap of the level-synchronous traversal (the
-    paper's ``max_levels``).  ``tile_size`` only matters to the tiled/kernel
-    backends; ``mesh_axis`` only to ``data_parallel``.
+    paper's ``max_levels``).  ``tile_size`` only matters to the tile-layout
+    backends (tiled/kernel/graph_parallel); ``mesh_axis`` is the batch axis
+    of the mesh backends (``data_parallel`` shards batch blocks over it,
+    ``graph_parallel`` its sample axis); ``model_axis`` is the
+    ``graph_parallel`` row-partition axis — destination rows shard over it
+    and the per-level frontier all-gather runs on it alone.
     """
     diffusion: str = "ic"
     backend: str = "dense"
@@ -53,6 +62,7 @@ class SamplerSpec:
     sort_starts: bool = False
     tile_size: int = 128
     mesh_axis: str = "data"
+    model_axis: str = "model"
 
     def __post_init__(self):
         if self.diffusion not in DIFFUSIONS:
@@ -67,6 +77,11 @@ class SamplerSpec:
                 f"{sorted(_SUPPORTED)}")
         if self.num_colors < 1 or self.max_iters < 1 or self.tile_size < 1:
             raise ValueError("num_colors / max_iters / tile_size must be ≥ 1")
+        if self.backend == "graph_parallel" \
+                and self.mesh_axis == self.model_axis:
+            raise ValueError(
+                "graph_parallel needs DISTINCT axes: mesh_axis (batches) "
+                f"and model_axis (graph rows) are both {self.mesh_axis!r}")
 
     def replace(self, **kw) -> "SamplerSpec":
         return dataclasses.replace(self, **kw)

@@ -27,6 +27,12 @@ shard_map program — each shard computes its own contiguous slice with
 per-batch RNG streams on its own devices, so pool builds parallelize
 across the mesh instead of staging one batch at a time through the
 default device (other backends keep the sequential default-device path).
+With ``backend == "graph_parallel"`` the GRAPH is partitioned too: on a
+2-D (data × model) mesh each device persistently holds only its
+destination-row slice of the adjacency tiles, batches shard over ``data``
+and every per-level collective (frontier all-gather) names only ``model``
+— graphs bigger than one device's memory build pools at all, and the
+resulting slots are still bit-identical to a 1-device dense pool.
 
 Persistence: snapshots are written through the same manifest format as the
 base class, with the shard layout recorded in the manifest's ``extra``
@@ -48,6 +54,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.checkpoint import manager
 from repro.core import rrr
 from repro.graph import csr
+from repro.sampling import SamplerSpec
 from repro.serve.influence.sketch_store import PoolConfig, SketchStore
 
 
@@ -79,9 +86,13 @@ class ShardedSketchStore(SketchStore):
 
     def _make_sampler(self, g: csr.Graph, spec, g_rev):
         """Back the sampler with the store's mesh — a ``data_parallel``
-        spec builds each shard's slot block on that shard's own devices."""
+        spec builds each shard's slot block on that shard's own devices; a
+        ``graph_parallel`` spec additionally row-partitions the graph over
+        the spec's ``model_axis`` (batch blocks follow the store's slot
+        axis, so slots land exactly where ``visited_stack`` shards them)."""
         from repro import sampling
-        if spec.backend == "data_parallel" and spec.mesh_axis != self.axis:
+        if spec.backend in ("data_parallel", "graph_parallel") \
+                and spec.mesh_axis != self.axis:
             spec = spec.replace(mesh_axis=self.axis)
         return sampling.make_sampler(g, spec, mesh=self.mesh, g_rev=g_rev)
 
@@ -164,11 +175,17 @@ class ShardedSketchStore(SketchStore):
 
     # -------------------------------------------------------- persistence
     def _manifest_extra(self) -> dict:
-        """Shard layout + the `SamplerSpec` (base class) in one ``extra``."""
+        """Shard layout + the `SamplerSpec` (base class) in one ``extra``.
+
+        ``mesh_shape`` records the FULL (data × model) layout the pool was
+        built under — with a ``graph_parallel`` spec that is the row
+        partition too, which restore validates against the new mesh."""
         return {**super()._manifest_extra(),
                 "kind": "sharded_sketch_pool",
                 "mesh_axis": self.axis,
                 "num_shards": self.num_shards,
+                "mesh_shape": {str(a): int(self.mesh.shape[a])
+                               for a in self.mesh.axis_names},
                 "shard_layout": self.shard_layout()}
 
     @staticmethod
@@ -185,15 +202,45 @@ class ShardedSketchStore(SketchStore):
                 g_rev: csr.Graph | None = None) -> "ShardedSketchStore":
         """Rebuild a bit-identical pool, re-slotted onto ``mesh``.
 
-        The new mesh may have any shape — the snapshot's slot-ordered
-        global arrays are simply re-sliced into the new axis's contiguous
-        blocks (the recorded layout of the *saving* mesh is metadata, not a
-        constraint).  Masks load straight from disk to host
-        (``_restored_fields`` with host placement), so restore never
-        transits the pool through a single device.
+        The new mesh may have any shape along the slot axis — the
+        snapshot's slot-ordered global arrays are simply re-sliced into the
+        new axis's contiguous blocks (the recorded layout of the *saving*
+        mesh is metadata, not a constraint).  Masks load straight from disk
+        to host (``_restored_fields`` with host placement), so restore
+        never transits the pool through a single device.
+
+        With no ``config``, the snapshot's recorded `SamplerSpec` is
+        adopted wholesale — a pool built graph-parallel (because the graph
+        exceeds one device) restores with a graph-parallel sampler, never
+        silently falling back to a dense refresh path.  An explicit config
+        still overrides (backends are interchangeable bit-for-bit, so
+        re-backending a pool on restore is a legitimate choice).
+
+        Refused layouts: a ``graph_parallel`` restore spec needs the new
+        mesh to carry its model axis (future ``refresh`` calls must be
+        able to row-partition the graph), and — via the base class — a
+        diffusion mismatch with the snapshot always raises.
         """
+        step, manifest = cls._resolve_snapshot(directory, step)
+        extra = manifest.get("extra", {})
+        if config is None:
+            saved_spec = extra.get("sampler_spec")
+            config = PoolConfig(
+                spec=SamplerSpec.from_manifest(saved_spec)) \
+                if saved_spec else PoolConfig()
+        spec = config.spec
+        if spec.backend == "graph_parallel" and (
+                mesh is None or spec.model_axis not in mesh.axis_names):
+            raise ValueError(
+                f"layout mismatch: a graph_parallel pool needs a mesh with "
+                f"model axis {spec.model_axis!r} to refresh, but the "
+                f"restore mesh has axes "
+                f"{mesh.axis_names if mesh is not None else ()} (snapshot "
+                f"was written under mesh_shape "
+                f"{extra.get('mesh_shape')}) — restore onto a "
+                "(data × model) mesh or with a non-graph_parallel spec")
         config, epoch, nbi, batches, epochs = cls._restored_fields(
-            directory, config if config is not None else PoolConfig(), step)
+            directory, config, step, manifest=manifest)
         store = cls(g, config, mesh, axis=axis, g_rev=g_rev)
         store.epoch = epoch
         store.next_batch_index = nbi

@@ -11,8 +11,9 @@ Sampling routes through the `repro.sampling` facade: ``PoolConfig.spec`` is
 a typed, frozen `SamplerSpec` (diffusion × backend + knobs) and the store
 builds one `Sampler` from it — the same spec serves IC and LT pools, dense
 and tiled/kernel expansion, and (in the sharded subclass) shard_map
-data-parallel pool builds.  The old untyped ``sample_kw`` dict converts
-with a DeprecationWarning.
+data-parallel and graph-parallel pool builds.  (The deprecated untyped
+``sample_kw`` dict, which warned since the Sampler-API PR, is gone — pass
+``spec=SamplerSpec(...)``.)
 
 Freshness is tracked per batch with an **epoch** tag: ``refresh()`` bumps
 the store epoch and resamples the oldest batches with brand-new batch
@@ -56,18 +57,16 @@ class PoolConfig:
     When an explicit spec is given, ``num_colors``/``master_seed`` are
     adopted from it, and an explicitly-set value that disagrees with the
     spec raises (``sampling.resolve_spec`` — the ``None`` field defaults
-    make "explicitly set" detectable).  ``sample_kw`` is the deprecated
-    untyped dict — converted to a spec with a warning.
+    make "explicitly set" detectable).
     """
     num_colors: int | None = None
     max_batches: int = 64
     memory_budget_mb: float | None = None
     master_seed: int | None = None
     spec: SamplerSpec | None = None
-    sample_kw: dataclasses.InitVar[dict | None] = None
 
-    def __post_init__(self, sample_kw):
-        spec = resolve_spec(self.spec, sample_kw,
+    def __post_init__(self):
+        spec = resolve_spec(self.spec,
                             num_colors=self.num_colors,
                             master_seed=self.master_seed)
         object.__setattr__(self, "num_colors", spec.num_colors)
@@ -231,16 +230,23 @@ class SketchStore:
                      extra=self._manifest_extra())
 
     @classmethod
+    def _resolve_snapshot(cls, directory: str, step: int | None):
+        """(step, manifest) of the latest (or given) snapshot — read ONCE;
+        restore paths that need the manifest early pass it back down."""
+        step = step if step is not None else manager.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no sketch-pool snapshot in {directory}")
+        return step, manager.read_manifest(directory, step)
+
+    @classmethod
     def _restored_fields(cls, directory: str, config: PoolConfig,
-                         step: int | None):
+                         step: int | None, manifest: dict | None = None):
         """(config, epoch, next_batch_index, batches, batch_epochs) of a
         snapshot.  Leaves load as host numpy; each mask is placed via
         ``cls._mask_array``, so the whole pool never transits one device
         unless the subclass wants it to."""
-        step = step if step is not None else manager.latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no sketch-pool snapshot in {directory}")
-        manifest = manager.read_manifest(directory, step)
+        if manifest is None:
+            step, manifest = cls._resolve_snapshot(directory, step)
         saved_spec = manifest.get("extra", {}).get("sampler_spec")
         if saved_spec is not None:
             saved = SamplerSpec.from_manifest(saved_spec)

@@ -43,10 +43,7 @@ def main():
 
     # ---- graph parallel ≡ single-device (coupled RNG) ----------------------
     mesh2 = jax.make_mesh((2, 4), ("data", "model"))
-    g2 = csr.from_edges(np.asarray(g.src)[:g.num_edges],
-                        np.asarray(g.dst)[:g.num_edges],
-                        np.asarray(g.prob)[:g.num_edges],
-                        g.num_vertices, dedupe=True)
+    g2 = csr.dedupe(g)
     tg = tiles.from_graph(g2)
     ptg = partition.partition(tg, num_shards=4)
     st = traversal.random_starts(jax.random.key(3), g2.num_vertices, C)

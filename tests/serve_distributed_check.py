@@ -189,6 +189,84 @@ def main():
     assert lt_sig == l1_sig and lt_sig > 0
     print("OK lt_data_parallel")
 
+    # ---- graph_parallel pools: 2-D (data × model) meshes ≡ 1-device dense -
+    # The graph ITSELF is row-partitioned over 'model' (each device holds
+    # only its slice of the adjacency tiles; the frontier is all-gathered
+    # per level), batches shard over 'data' — and every pool slot is STILL
+    # bit-identical to the 1-device dense pool, for both diffusions, on
+    # both mesh orientations.
+    # One dedupe-clean edge list for BOTH sides of the comparison: the tile
+    # layout needs parallel edges merged, and bit-identity needs the dense
+    # reference sampling the very same graph.
+    from repro.graph import csr
+    g2 = csr.dedupe(g)
+    gp = dense_ref = None          # the ic stores feed the manifest section
+    for diffusion in ("lt", "ic"):
+        dense_ref = SketchStore(
+            g2, PoolConfig(max_batches=32,
+                          spec=sampling.SamplerSpec(diffusion=diffusion,
+                                                    num_colors=64,
+                                                    master_seed=3)))
+        dense_ref.ensure(6)
+        for d, m in ((2, 4), (4, 2)):
+            mesh_dm = jax.make_mesh((d, m), ("data", "model"))
+            gp_cfg = PoolConfig(
+                max_batches=32,
+                spec=sampling.SamplerSpec(diffusion=diffusion,
+                                          backend="graph_parallel",
+                                          num_colors=64, master_seed=3))
+            gp = ShardedSketchStore(g2, gp_cfg, mesh_dm)
+            gp.ensure(6)
+            assert gp.num_shards == d
+            for a, b in zip(dense_ref.batches, gp.batches):
+                assert a.batch_index == b.batch_index
+                np.testing.assert_array_equal(np.asarray(a.visited),
+                                              np.asarray(b.visited))
+        # engine answers from the last (4 × 2) store
+        s_gp, sig_gp = DistributedQueryEngine(gp).top_k(4)
+        s_rf, sig_rf = QueryEngine(dense_ref).top_k(4)
+        np.testing.assert_array_equal(s_gp, s_rf)
+        assert sig_gp == sig_rf
+    print("OK graph_parallel_pool")
+
+    # ---- graph_parallel refresh + manifest layout + restore refusal -------
+    # (continues with the ic (4 × 2) store from the last loop iteration)
+    slots_gp = gp.refresh(0.5)
+    slots_rf = dense_ref.refresh(0.5)
+    assert slots_gp == slots_rf and gp.epoch == dense_ref.epoch
+    for a, b in zip(dense_ref.batches, gp.batches):
+        assert a.batch_index == b.batch_index
+        np.testing.assert_array_equal(np.asarray(a.visited),
+                                      np.asarray(b.visited))
+    with tempfile.TemporaryDirectory() as dir_:
+        gp.save(dir_)
+        extra = ShardedSketchStore.saved_layout(dir_)
+        assert extra["mesh_shape"] == {"data": 4, "model": 2}
+        assert extra["sampler_spec"]["backend"] == "graph_parallel"
+        # layout mismatch: a graph_parallel restore onto a mesh with no
+        # model axis must refuse (future refreshes could not row-partition)
+        try:
+            ShardedSketchStore.restore(dir_, g2, gp.config, mesh8)
+            raise AssertionError("layout mismatch must raise")
+        except ValueError as e:
+            assert "model" in str(e)
+        # a DIFFERENT (data × model) layout restores fine — elastic slot
+        # re-sharding + fresh row partition for future refreshes
+        mesh_24 = jax.make_mesh((2, 4), ("data", "model"))
+        r = ShardedSketchStore.restore(dir_, g2, gp.config, mesh_24)
+        assert r.num_shards == 2
+        s_r, sig_r = DistributedQueryEngine(r).top_k(4)
+        s_g, sig_g = DistributedQueryEngine(gp).top_k(4)
+        np.testing.assert_array_equal(s_r, s_g)
+        assert sig_r == sig_g
+        # config=None adopts the snapshot's recorded spec wholesale: the
+        # pool comes back with a graph_parallel sampler, never a silent
+        # dense fallback for a graph that may not fit one device
+        r_def = ShardedSketchStore.restore(dir_, g2, None, mesh_24)
+        assert r_def.spec.backend == "graph_parallel"
+        assert r_def.spec == gp.spec
+    print("OK graph_parallel_manifest")
+
     # ---- async front-end: deadline flush, concurrency, refresh ------------
     deadline = 0.2
     engine = DistributedQueryEngine(sharded)

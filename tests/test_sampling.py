@@ -1,9 +1,11 @@
 """Unified Sampler API: spec validation, cross-backend bit-identity (dense
-vs tiled vs kernel, single process), LT serving end-to-end, PoolConfig spec
-migration, and the manifest diffusion guard.  (The data_parallel backend
-needs forced host devices — covered by tests/serve_distributed_check.py.)"""
+vs tiled vs kernel vs single-device graph_parallel, single process), LT
+serving end-to-end, PoolConfig spec rules, and the manifest diffusion
+guard.  (Multi-device data_parallel / graph_parallel need forced host
+devices — covered by tests/serve_distributed_check.py.)"""
 import dataclasses
 
+import jax
 import numpy as np
 import pytest
 
@@ -18,11 +20,8 @@ from repro.serve.influence import (MicroBatcher, PoolConfig, QueryEngine,
 def graph():
     """Dedupe-clean graph: the tile layout (tiled/kernel backends) needs
     parallel edges merged, and bit-identity requires one shared edge list."""
-    g = generators.powerlaw_cluster(250, 6.0, prob=(0.1, 0.6), seed=23)
-    e = g.num_edges
-    return csr.from_edges(np.asarray(g.src)[:e], np.asarray(g.dst)[:e],
-                          np.asarray(g.prob)[:e], g.num_vertices,
-                          dedupe=True)
+    return csr.dedupe(
+        generators.powerlaw_cluster(250, 6.0, prob=(0.1, 0.6), seed=23))
 
 
 # ----------------------------------------------------------------- spec
@@ -31,11 +30,19 @@ def test_spec_rejects_unknown_fields_and_combos():
         sampling.SamplerSpec(diffusion="sir")
     with pytest.raises(ValueError):
         sampling.SamplerSpec(backend="warp")
-    for bad in ("tiled", "kernel"):
-        with pytest.raises(ValueError, match="unsupported combination"):
-            sampling.SamplerSpec(diffusion="lt", backend=bad)
+    # LT has every backend except the Pallas kernel (per-(dst, color)
+    # selection doesn't fit the per-(edge, color, level) expand kernel).
+    with pytest.raises(ValueError, match="unsupported combination"):
+        sampling.SamplerSpec(diffusion="lt", backend="kernel")
     assert sampling.supported("ic", "kernel")
     assert not sampling.supported("lt", "kernel")
+    for backend in ("tiled", "graph_parallel"):
+        for diffusion in ("ic", "lt"):
+            assert sampling.supported(diffusion, backend)
+    # graph_parallel needs distinct batch and row axes
+    with pytest.raises(ValueError, match="DISTINCT"):
+        sampling.SamplerSpec(backend="graph_parallel", mesh_axis="x",
+                             model_axis="x")
 
 
 def test_spec_is_hashable_and_manifest_round_trips():
@@ -104,10 +111,54 @@ def test_tiled_backend_rejects_parallel_edges():
         sampling.make_sampler(g, sampling.SamplerSpec(backend="tiled"))
 
 
-def test_data_parallel_requires_mesh(graph):
+def test_lt_tiled_bit_identical_to_dense(graph):
+    """The ("lt", "tiled") matrix cell: tile expansion under the fixed
+    live-edge selection reproduces the dense LT sweep bit for bit."""
+    spec = sampling.SamplerSpec(diffusion="lt", num_colors=64, master_seed=5)
+    dense = sampling.make_sampler(graph, spec)
+    tiled = sampling.make_sampler(graph, spec.replace(backend="tiled"))
+    for bi in (0, 3):
+        ref = dense.sample(bi)
+        got = tiled.sample(bi)
+        assert got.batch_index == bi
+        np.testing.assert_array_equal(np.asarray(got.visited),
+                                      np.asarray(ref.visited))
+        np.testing.assert_array_equal(got.roots, np.asarray(ref.roots))
+
+
+def test_graph_parallel_bit_identical_on_trivial_mesh(graph):
+    """The whole row-partitioned block program (frontier all-gather,
+    psum-agreed termination, 2-D batch × row sharding) on a 1×1 mesh —
+    runnable in the single-device suite — must equal dense exactly."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for diffusion in ("ic", "lt"):
+        spec = sampling.SamplerSpec(diffusion=diffusion,
+                                    backend="graph_parallel",
+                                    num_colors=64, master_seed=9)
+        gp = sampling.make_sampler(graph, spec, mesh=mesh)
+        dense = sampling.make_sampler(graph, spec.replace(backend="dense"))
+        got = gp.sample_many([0, 2])
+        for b in got:
+            ref = dense.sample(b.batch_index)
+            np.testing.assert_array_equal(np.asarray(b.visited),
+                                          np.asarray(ref.visited))
+            np.testing.assert_array_equal(b.roots, np.asarray(ref.roots))
+    stacked = gp.sample_stacked([1])
+    assert stacked.shape == (1, graph.num_vertices, 2)
+
+
+def test_mesh_backends_require_mesh_and_axes(graph):
     with pytest.raises(ValueError, match="mesh"):
         sampling.make_sampler(
             graph, sampling.SamplerSpec(backend="data_parallel"))
+    with pytest.raises(ValueError, match="mesh"):
+        sampling.make_sampler(
+            graph, sampling.SamplerSpec(backend="graph_parallel"))
+    # graph_parallel refuses a mesh without the row-partition axis
+    with pytest.raises(ValueError, match="model"):
+        sampling.make_sampler(
+            graph, sampling.SamplerSpec(backend="graph_parallel"),
+            mesh=jax.make_mesh((1,), ("data",)))
 
 
 # ------------------------------------------------------------ PoolConfig
@@ -125,18 +176,11 @@ def test_pool_config_spec_wins_and_conflicts_raise():
         PoolConfig(num_colors=64, master_seed=9, spec=spec)
 
 
-def test_pool_config_sample_kw_shim_warns(graph):
-    with pytest.warns(DeprecationWarning):
-        cfg = PoolConfig(num_colors=64, master_seed=2,
-                         sample_kw={"model": "lt"})
-    assert cfg.spec.diffusion == "lt"
-    store = SketchStore(graph, cfg)
-    store.ensure(1)
-    ref = sampling.make_sampler(
-        graph, sampling.SamplerSpec(diffusion="lt", num_colors=64,
-                                    master_seed=2)).sample(0)
-    np.testing.assert_array_equal(np.asarray(store.batches[0].visited),
-                                  np.asarray(ref.visited))
+def test_pool_config_sample_kw_shim_is_gone():
+    """The deprecated ``sample_kw`` InitVar (warned since the Sampler-API
+    PR) is removed — a typed spec is the only way to configure sampling."""
+    with pytest.raises(TypeError, match="sample_kw"):
+        PoolConfig(num_colors=64, master_seed=2, sample_kw={"model": "lt"})
 
 
 def test_pool_config_instances_share_no_mutable_state():
