@@ -1,9 +1,18 @@
-"""Paper Fig. 9: frontier occupancy per traversal level.
+"""Paper Fig. 9: frontier occupancy per traversal level, plus the
+bucket-occupancy histogram the sparse-frontier capacity knob needs.
 
 GPU metric was wavefronts queued vs 440 SIMD units; the TPU analogue
 (DESIGN.md §2) is the fraction of 128-row tiles containing ≥1 active
 vertex — the dense-sweep utilization of the expansion kernel — plus the
 frontier width (active vertices / colors) per level.
+
+The second section drives `core.sparse.profile_traversal` (the REAL
+compacted execution, host-paced) and histograms, per level, which rung of
+the capacity-bucket ladder the level lands in and how full that bucket
+runs.  That histogram is the evidence `SamplerSpec.frontier_capacity`
+wants: if most levels land in (and mostly fill) one small bucket, pin the
+knob there for a two-rung ladder; a spread across rungs says keep the
+auto ladder.
 """
 from __future__ import annotations
 
@@ -11,8 +20,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import traversal
-from repro.graph import generators
+from repro.core import rrr, sparse, traversal
+from repro.graph import csr, generators
 
 
 def run(n=4000, deg=12.0, colors=(1, 8, 32), probs=(0.05, 0.2), out=print):
@@ -32,6 +41,45 @@ def run(n=4000, deg=12.0, colors=(1, 8, 32), probs=(0.05, 0.2), out=print):
                        round(float(res.stats.active_tile_frac[level]), 4))
                 rows.append(row)
                 out(",".join(str(x) for x in row))
+    bucket_histogram(n=n, deg=deg, out=out)
+    return rows
+
+
+def bucket_histogram(n=4000, deg=12.0, colors=64, probs=(0.05, 0.2),
+                     tile_rows=64, batches=4, master_seed=7, out=print):
+    """Bucket-occupancy histogram over the ladder's rungs.
+
+    For each prob: run ``batches`` real compacted traversals
+    (`sparse.profile_traversal`), bin every level by the ladder rung it
+    picks, and report per rung: level count, mean active-edge-block
+    occupancy (active / rung capacity), and the share of total
+    fused-edge work done at that rung.
+    """
+    out("# bucket histogram: prob,bucket,levels,mean_occupancy,work_share")
+    rows = []
+    for p in probs:
+        g = csr.dedupe(generators.powerlaw_cluster(n, deg, prob=(0.0, p),
+                                                   seed=5))
+        fidx = sparse.build_frontier_index(csr.transpose(g),
+                                           tile_rows=tile_rows)
+        ladder = sparse.bucket_ladder(fidx.num_blocks)
+        levels = []
+        for bi in range(batches):
+            starts = rrr.batch_starts(g.num_vertices, colors, master_seed, bi)
+            levels += sparse.profile_traversal(
+                fidx, starts, colors, rrr.batch_seed(master_seed, bi))
+        total_work = max(sum(r["fused_edge_visits"] for r in levels), 1)
+        for rung in ladder:
+            hit = [r for r in levels if r["bucket"] == rung]
+            if not hit:
+                continue
+            row = (p, rung, len(hit),
+                   round(float(np.mean([r["active_edge_blocks"] / rung
+                                        for r in hit])), 3),
+                   round(sum(r["fused_edge_visits"] for r in hit)
+                         / total_work, 3))
+            rows.append(row)
+            out(",".join(str(x) for x in row))
     return rows
 
 

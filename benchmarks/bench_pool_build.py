@@ -1,29 +1,44 @@
-"""Pool build throughput: sampler backend × shard count / mesh shape →
-batches/sec.
+"""Pool build throughput: backend × frontier mode × diffusion →
+batches/sec, with the work counters that make sparse-frontier savings
+measurable (not vibes).
 
-Sweeps the unified Sampler API's backends over a sketch-pool build on a
-forced 8-device CPU host mesh (the multi-device test-suite trick):
+Two sweeps over a sketch-pool build on a forced 8-device CPU host mesh
+(the multi-device test-suite trick):
 
-* ``dense``          — one batch at a time on the default device (the
-                       pre-refactor `SketchStore` path);
-* ``data_parallel``  — whole batch blocks via shard_map, each shard
-                       traversing its own contiguous slot slice, swept over
-                       shard counts;
-* ``graph_parallel`` — 2-D (data × model) meshes: destination rows sharded
-                       over ``model`` (frontier all-gather per level),
-                       batches over ``data``, swept over mesh shapes — the
-                       collective-bound regime for graphs too big for one
-                       device.
+* ``low_occupancy`` — the standard sparse-frontier sweep: a graph whose
+  unified frontier collapses after the first couple of levels (paper
+  Fig. 9), where the dense sweep's every-edge-every-level cost is pure
+  waste.  Backends ``dense`` and ``data_parallel``, each under
+  ``frontier="dense"`` and ``"sparse"`` — same bits, different work.
+* ``graph_parallel`` — the 2-D (data × model) mesh cells on a smaller
+  graph (per-level frontier all-gathers on forced host devices are
+  collective-bound, so the big graph would measure the CPU's psum, not
+  the build mechanics), with its dense-backend reference alongside.
 
-Each cell builds the SAME pool (bit-identical per slot — asserted) so the
-rows measure pure build mechanics.  Shard counts on one CPU share silicon,
-so CPU speedups are modest; the trajectory on a real pod is the point.
+Timing protocol (steady state, the serving regime): the cold ``ensure``
++ stack staging warm every program, then
+
+* ``build_s``    — ``refresh(1.0)``: a WARM full-pool block resample
+                   (every slot redrawn at fresh batch indices + the whole
+                   stack rewritten in place);
+* ``refresh_s``  — ``refresh(0.25)``: the launcher's default epoch
+                   refresh, after one warm-up at that block size.  The
+                   donated-buffer slot scatter (`sketch_store._set_slots`)
+                   keeps the pool allocation — refresh cost is the
+                   fraction's sampling, not a pool re-stage (the old
+                   ``refresh_s ≈ build_s`` pathology).
+
+Every cell runs the SAME ensure/refresh sequence, so all cells of a
+(sweep, diffusion) hold bit-identical pools at the end — asserted.
+
+Per row: ``fused_edge_visits`` (summed over the final pool's instrumented
+batches; -1 where the backend doesn't instrument) and
+``active_tile_frac`` (mean per-level fraction of active source row-blocks
+from `core.sparse.profile_traversal` — the Fig. 9 quantity sparse
+execution exploits; identical for dense and sparse rows by construction).
 
 Runs in a **subprocess** so the forced device count never leaks into the
-parent.  Emits the standard ``BENCH_<name>.json`` shape::
-
-    {"bench": ..., "schema": 1, "unix_time": ..., "env": {...},
-     "params": {...}, "rows": [{...}, ...]}
+parent.  Emits the standard ``BENCH_<name>.json`` shape.
 """
 from __future__ import annotations
 
@@ -37,6 +52,28 @@ _DEVICES = 8
 
 
 # ------------------------------------------------------------------ worker
+def _mean_active_tile_frac(g, diffusion: str, colors: int, tile: int,
+                           master_seed: int) -> float:
+    """Mean per-level active source row-block fraction of batch 0."""
+    import numpy as np
+
+    from repro.core import lt, rrr, sparse
+    from repro.graph import csr
+
+    g_rev = csr.transpose(g)
+    cb = None
+    if diffusion == "lt":
+        g_rev = lt.normalize_lt_weights(g_rev)
+        cb = lt.selection_cum_before(g_rev)
+    fidx = sparse.build_frontier_index(g_rev, tile_rows=tile, cb=cb)
+    starts = rrr.batch_starts(g.num_vertices, colors, master_seed, 0)
+    prof = sparse.profile_traversal(fidx, starts, colors,
+                                    rrr.batch_seed(master_seed, 0),
+                                    diffusion=diffusion)
+    fracs = [r["active_row_blocks"] / fidx.num_row_blocks for r in prof]
+    return float(np.mean(fracs)) if fracs else 0.0
+
+
 def _worker(args: dict) -> None:
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
                                f" --xla_force_host_platform_device_count={_DEVICES}").strip()
@@ -49,80 +86,107 @@ def _worker(args: dict) -> None:
     from repro.serve.distributed import ShardedSketchStore
     from repro.serve.influence import PoolConfig, SketchStore
 
-    # Dedupe once for every backend: the graph_parallel tile layout needs
-    # parallel edges merged, and bit-identity needs one shared edge list.
-    g = csr.dedupe(generators.powerlaw_cluster(args["n"], args["deg"],
-                                               prob=(0.0, 0.25), seed=11))
+    for sweep in args["sweeps"]:
+        # Dedupe once per sweep: tile layouts need parallel edges merged,
+        # and bit-identity needs one shared edge list across backends.
+        g = csr.dedupe(generators.powerlaw_cluster(
+            sweep["n"], sweep["deg"], prob=tuple(sweep["prob"]), seed=11))
+        cells = ([("dense", (1, 1))]
+                 + [("data_parallel", (s, 1))
+                    for s in sweep["shard_counts"]]
+                 + [("graph_parallel", tuple(dm))
+                    for dm in sweep["gp_mesh_shapes"]])
 
-    def build(backend: str, mesh_shape: tuple[int, int]):
-        d, m = mesh_shape
-        spec = sampling.SamplerSpec(diffusion=args["diffusion"],
-                                    backend=backend,
-                                    num_colors=args["colors"], master_seed=7)
-        cfg = PoolConfig(max_batches=args["batches"], spec=spec)
-        if backend == "dense":
-            store = SketchStore(g, cfg)
-        else:
-            devs = np.array(jax.devices()[: d * m])
-            mesh = Mesh(devs.reshape(d, m), ("data", "model")) if m > 1 \
-                else Mesh(devs, ("data",))
-            store = ShardedSketchStore(g, cfg, mesh)
-        store.ensure(1)                          # compile outside the timing
-        t0 = time.perf_counter()
-        store.ensure(args["batches"])
-        build_s = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        store.refresh(0.5)
-        refresh_s = time.perf_counter() - t0
-        return store, build_s, refresh_s
+        for diffusion in sweep["diffusions"]:
+            tile_frac = _mean_active_tile_frac(
+                g, diffusion, sweep["colors"], sweep["tile"], 7)
+            ref_store = None
+            for backend, (d, m) in cells:
+                for frontier in sweep["frontiers"]:
+                    spec = sampling.SamplerSpec(
+                        diffusion=diffusion, backend=backend,
+                        num_colors=sweep["colors"], master_seed=7,
+                        tile_size=sweep["tile"], frontier=frontier)
+                    cfg = PoolConfig(max_batches=sweep["batches"], spec=spec)
+                    if backend == "dense":
+                        store = SketchStore(g, cfg)
+                    else:
+                        devs = np.array(jax.devices()[: d * m])
+                        mesh = (Mesh(devs.reshape(d, m), ("data", "model"))
+                                if m > 1 else Mesh(devs, ("data",)))
+                        store = ShardedSketchStore(g, cfg, mesh)
+                    # Cold build compiles every program; stack staging
+                    # arms the in-place refresh path.
+                    store.ensure(sweep["batches"])
+                    store.visited_stack()
+                    t0 = time.perf_counter()
+                    store.refresh(1.0)               # warm full resample
+                    build_s = time.perf_counter() - t0
+                    store.refresh(0.25)              # warm the 1/4 block
+                    t0 = time.perf_counter()
+                    store.refresh(0.25)              # steady-state epoch
+                    refresh_s = time.perf_counter() - t0
 
-    cells = ([("dense", (1, 1))]
-             + [("data_parallel", (s, 1)) for s in args["shard_counts"]]
-             + [("graph_parallel", tuple(dm))
-                for dm in args["gp_mesh_shapes"]])
-    ref_store = None
-    for backend, (d, m) in cells:
-        store, build_s, refresh_s = build(backend, (d, m))
-        if ref_store is None:
-            ref_store = store        # the measured dense row IS the reference
-        for a, b in zip(ref_store.batches, store.batches):   # bit identity
-            np.testing.assert_array_equal(np.asarray(a.visited),
-                                          np.asarray(b.visited))
-        built = args["batches"] - 1              # ensure(1) pre-built one
-        row = {
-            "backend": backend,
-            "mesh": f"{d}x{m}",
-            # Slot-shard count (== store.num_shards): the pool's batch
-            # parallelism.  A graph_parallel (d, m) cell has d-way batch
-            # parallelism — its m-way row partition lives in "mesh".
-            "shards": getattr(store, "num_shards", 1),
-            "batches": args["batches"],
-            "colors": args["colors"],
-            "build_s": round(build_s, 3),
-            "batches_per_s": round(built / max(build_s, 1e-9), 2),
-            "refresh_s": round(refresh_s, 3),
-        }
-        print("ROW " + json.dumps(row), flush=True)
+                    if ref_store is None:
+                        ref_store = store    # dense/dense row IS the ref
+                    for a, b in zip(ref_store.batches, store.batches):
+                        np.testing.assert_array_equal(
+                            np.asarray(a.visited), np.asarray(b.visited))
+                    visits = [b.fused_edge_visits for b in store.batches]
+                    row = {
+                        "sweep": sweep["name"],
+                        "diffusion": diffusion,
+                        "backend": backend,
+                        "frontier": frontier,
+                        "mesh": f"{d}x{m}",
+                        "shards": getattr(store, "num_shards", 1),
+                        "batches": sweep["batches"],
+                        "colors": sweep["colors"],
+                        "build_s": round(build_s, 3),
+                        "batches_per_s": round(
+                            sweep["batches"] / max(build_s, 1e-9), 2),
+                        "refresh_s": round(refresh_s, 3),
+                        "fused_edge_visits": (sum(visits)
+                                              if min(visits) >= 0 else -1),
+                        "active_tile_frac": round(tile_frac, 4),
+                    }
+                    print("ROW " + json.dumps(row), flush=True)
     print("ENV " + json.dumps({"backend": jax.default_backend(),
                                "devices": _DEVICES,
                                "jax": jax.__version__}), flush=True)
 
 
 # ------------------------------------------------------------------ driver
-def run(n=600, deg=8.0, colors=64, batches=8, shard_counts=(1, 4, 8),
-        gp_mesh_shapes=((4, 2), (2, 4)), diffusion="ic", out=print,
-        json_path="BENCH_pool_build.json"):
-    params = {"n": n, "deg": deg, "colors": colors, "batches": batches,
-              "shard_counts": list(shard_counts),
-              "gp_mesh_shapes": [list(dm) for dm in gp_mesh_shapes],
-              "diffusion": diffusion}
+def standard_sweeps(low_n=6000, gp_n=1200, batches=16) -> list[dict]:
+    """The two recorded sweeps (scaled down by callers like run.py).
+
+    ``batches`` is 4× the data_parallel shard count so a quarter-refresh
+    still fills every shard (a 2-batch refresh padded to 4 shards would
+    do build-half work for a quarter of the slots and skew the ratio)."""
+    return [
+        dict(name="low_occupancy", n=low_n, deg=16.0, prob=(0.0, 0.05),
+             colors=64, tile=64, batches=batches,
+             diffusions=["ic", "lt"], frontiers=["dense", "sparse"],
+             shard_counts=[4], gp_mesh_shapes=[]),
+        dict(name="graph_parallel", n=gp_n, deg=8.0, prob=(0.0, 0.1),
+             colors=64, tile=64, batches=max(batches // 2, 8),
+             diffusions=["ic", "lt"], frontiers=["dense", "sparse"],
+             shard_counts=[], gp_mesh_shapes=[(2, 4)]),
+    ]
+
+
+def run(sweeps=None, out=print, json_path="BENCH_pool_build.json"):
+    params = {"sweeps": [dict(s, prob=list(s["prob"]),
+                              gp_mesh_shapes=[list(dm) for dm
+                                              in s["gp_mesh_shapes"]])
+                         for s in (sweeps or standard_sweeps())]}
     env = dict(os.environ)
     src = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "src")
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     proc = subprocess.run(
         [sys.executable, os.path.abspath(__file__), json.dumps(params)],
-        capture_output=True, text=True, env=env, timeout=1200)
+        capture_output=True, text=True, env=env, timeout=2400)
     if proc.returncode != 0:
         raise RuntimeError(f"worker failed:\n{proc.stdout}\n{proc.stderr}")
     rows, bench_env = [], {}
@@ -132,14 +196,15 @@ def run(n=600, deg=8.0, colors=64, batches=8, shard_counts=(1, 4, 8),
         elif line.startswith("ENV "):
             bench_env = json.loads(line[4:])
 
-    out("# pool build: backend,mesh,shards,batches,build_s,"
-        "batches_per_s,refresh_s")
+    out("# pool build: sweep,diffusion,backend,frontier,mesh,build_s,"
+        "batches_per_s,refresh_s,fused_edge_visits,active_tile_frac")
     for r in rows:
         out(",".join(str(r[k]) for k in
-                     ("backend", "mesh", "shards", "batches", "build_s",
-                      "batches_per_s", "refresh_s")))
+                     ("sweep", "diffusion", "backend", "frontier", "mesh",
+                      "build_s", "batches_per_s", "refresh_s",
+                      "fused_edge_visits", "active_tile_frac")))
 
-    record = {"bench": "pool_build", "schema": 1,
+    record = {"bench": "pool_build", "schema": 2,
               "unix_time": int(time.time()), "env": bench_env,
               "params": params, "rows": rows}
     if json_path:

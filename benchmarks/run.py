@@ -16,7 +16,7 @@ def main() -> None:
                             bench_fused_vs_unfused, bench_frontier_profile,
                             bench_kernels, bench_imm, bench_scaling,
                             bench_serve_influence, bench_distributed_serve,
-                            bench_pool_build, roofline)
+                            bench_pool_build, bench_scatter_words, roofline)
 
     sections = [
         ("Fig4 work savings / occupancy", lambda: bench_work_savings.run(
@@ -28,6 +28,9 @@ def main() -> None:
         ("Fig9 frontier profile", lambda: bench_frontier_profile.run(
             n=2000, colors=(1, 32), probs=(0.2,))),
         ("kernel micros", bench_kernels.run),
+        ("scatter_or_words packed fast path",
+         lambda: bench_scatter_words.run(rows=1 << 12,
+                                         counts=(1 << 8, 1 << 11))),
         ("IMM end-to-end", lambda: bench_imm.run(theta_cap=2048)),
         ("Online serving: throughput vs pool size",
          lambda: bench_serve_influence.run(n=1000, pool_sizes=(2, 4, 8))),
@@ -35,9 +38,10 @@ def main() -> None:
          lambda: bench_distributed_serve.run(
              n=600, batches=8, shard_counts=(1, 4, 8),
              deadlines_ms=(5, 25), clients=32)),
-        ("Pool build: sampler backend × shards (8 forced CPU devices)",
-         lambda: bench_pool_build.run(n=600, batches=8,
-                                      shard_counts=(1, 4, 8))),
+        ("Pool build: backend × frontier × diffusion (8 forced CPU devices)",
+         lambda: bench_pool_build.run(
+             sweeps=bench_pool_build.standard_sweeps(low_n=1500, gp_n=600,
+                                                     batches=8))),
         ("Fig10/11 device scaling", lambda: bench_scaling.run(
             device_counts=(1, 2, 4, 8))),
         ("Roofline table (from dry-run records)", roofline.table),

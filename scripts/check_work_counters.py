@@ -1,0 +1,48 @@
+"""CI guard: sparse-frontier work counters == dense, deterministically.
+
+The sparse engine's claim is *work proportionality without changing the
+work accounting*: `TraversalStats.fused_edge_visits` counts edges whose
+source row carries an active color, and every such edge lives in an
+active (hence gathered) tile — so sparse and dense must agree EXACTLY,
+per batch, on a fixed graph.  Counter equality is deterministic (same
+counter RNG, same int32 arithmetic), so this can gate CI without flaking
+the way a wall-clock threshold would.
+
+Run from the repo root (ci.sh does):
+
+    PYTHONPATH=src python scripts/check_work_counters.py
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import sampling
+from repro.graph import csr, generators
+
+
+def main() -> None:
+    g = csr.dedupe(generators.powerlaw_cluster(500, 6.0, prob=(0.05, 0.3),
+                                               seed=17))
+    spec = sampling.SamplerSpec(num_colors=64, master_seed=9)
+    dense = sampling.make_sampler(g, spec)
+    sparse = sampling.make_sampler(g, spec.replace(frontier="sparse"))
+    for bi in range(4):
+        a, b = dense.sample(bi), sparse.sample(bi)
+        assert a.fused_edge_visits >= 0, "dense batch not instrumented"
+        if (a.fused_edge_visits != b.fused_edge_visits
+                or a.unfused_edge_visits != b.unfused_edge_visits):
+            raise SystemExit(
+                f"work-counter mismatch at batch {bi}: dense "
+                f"(fused={a.fused_edge_visits}, "
+                f"unfused={a.unfused_edge_visits}) vs sparse "
+                f"(fused={b.fused_edge_visits}, "
+                f"unfused={b.unfused_edge_visits})")
+        np.testing.assert_array_equal(np.asarray(a.visited),
+                                      np.asarray(b.visited))
+    print(f"[check_work_counters] OK: 4 batches, sparse == dense "
+          f"(fused={a.fused_edge_visits}, unfused={a.unfused_edge_visits} "
+          "at batch 3)")
+
+
+if __name__ == "__main__":
+    main()

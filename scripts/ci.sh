@@ -39,14 +39,28 @@ graph_parallel_smoke() {
         --sampler-backend graph_parallel
     python -m repro.launch.serve_influence --smoke --mesh 2x2 \
         --diffusion lt       # M>1 defaults to graph_parallel
+    # Sparse-frontier leg: compacted per-level expansion + compacted
+    # frontier all-gather over the model axis, checked bit-identical to
+    # the dense-frontier dense-backend reference pool inside the smoke.
+    python -m repro.launch.serve_influence --smoke --mesh 2x4 \
+        --sampler-backend graph_parallel --frontier sparse
+}
+
+# Deterministic work-proportionality guard: sparse fused_edge_visits must
+# equal dense EXACTLY on a fixed graph (counter equality, not wall clock,
+# so it cannot flake).
+work_counter_guard() {
+    python scripts/check_work_counters.py
 }
 
 if python -m pip install -e . ; then
     python -m pytest -x -q
     graph_parallel_smoke
+    work_counter_guard
 else
     echo "[ci] pip install failed; running from source tree" >&2
     export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
     python -m pytest -x -q
     graph_parallel_smoke
+    work_counter_guard
 fi

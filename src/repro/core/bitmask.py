@@ -47,14 +47,25 @@ def set_color(mask: jnp.ndarray, item: jnp.ndarray, color: jnp.ndarray) -> jnp.n
 
 
 def scatter_or_words(dst: jnp.ndarray, rows: jnp.ndarray, words: jnp.ndarray,
-                     values: jnp.ndarray) -> jnp.ndarray:
+                     values: jnp.ndarray, *,
+                     unique: bool = False) -> jnp.ndarray:
     """dst[rows, words] |= values with duplicate-index OR semantics.
 
     Bitwise-or is not a native scatter combiner; since OR over packed words is
     per-bit max, we unpack each contribution to 32 bool lanes, scatter with
     ``max``, and repack.  Cost: 32× the index traffic — fine for the pure-JAX
     path; the Pallas kernel keeps everything packed.
+
+    ``unique=True`` is the packed fast path for callers whose contributions
+    are already OR-combined per (row, word) target — every (rows[i],
+    words[i]) pair distinct, e.g. segment-locally pre-OR'd compaction
+    output or the distributed sparse-frontier reconstruction.  With no
+    duplicate to combine, a gather-OR-scatter of whole uint32 words is
+    exact (no lost updates) and pays 1× the index traffic instead of 32×.
     """
+    if unique:
+        cur = dst[rows, words]
+        return dst.at[rows, words].set(cur | values, unique_indices=True)
     lanes = unpack_bits(values[..., None])[..., 0, :]          # (..., 32) bool
     dst_lanes = unpack_bits(dst)                               # (R, W, 32)
     dst_lanes = dst_lanes.at[rows, words].max(lanes)

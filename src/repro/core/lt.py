@@ -147,3 +147,19 @@ def _run_fused_lt_jit(g: csr.Graph, cb, starts, seed, num_colors: int,
                       max_levels: int):
     sel = selection_mask_from_cb(g, cb, num_colors, seed)
     return lt_traversal_program(g, sel, starts, num_colors, max_levels)
+
+
+@partial(jax.jit, static_argnames=("num_colors", "max_levels"))
+def run_fused_lt_block(g: csr.Graph, cb, starts, seeds, num_colors: int,
+                       max_levels: int = 64) -> jnp.ndarray:
+    """Fused multi-batch LT sweep: ONE dispatch traverses a block of
+    batches via ``lax.map`` (each batch draws its own live-edge selection
+    from its seed, one (E, W) selection transient at a time).
+
+    starts (B, C) int32 / seeds (B,) uint32 → visited (B, V, W)."""
+    def one(args):
+        st, sd = args
+        sel = selection_mask_from_cb(g, cb, num_colors, sd)
+        return lt_traversal_program(g, sel, st, num_colors, max_levels)
+
+    return jax.lax.map(one, (starts, seeds))

@@ -140,6 +140,43 @@ def edge_values_to_tiles(tg: TiledGraph, values: np.ndarray,
                     np.asarray(fill, vals.dtype)).astype(vals.dtype)
 
 
+def with_null_tile(tg: TiledGraph) -> TiledGraph:
+    """``tg`` with ONE inert tile appended at index ``num_tiles`` — the
+    fill target of sparse-frontier compaction (`jnp.nonzero` pads unused
+    capacity slots with ``num_tiles``, which must gather something).
+
+    The null tile is all-prob-0 (never propagates), sources block 0, and
+    targets the LAST destination block, so a compacted-and-padded tile list
+    stays sorted by destination block — the invariant the Pallas kernel's
+    revisiting accumulation needs.  Null tiles either extend a real last-
+    block run (zero extra contribution) or form their own zero run there.
+    """
+    t = tg.tile_size
+    last_dst = tg.padded_vertices // t - 1
+    return TiledGraph(
+        prob=jnp.concatenate(
+            [tg.prob, jnp.zeros((1, t, t), tg.prob.dtype)]),
+        edge_id=jnp.concatenate(
+            [tg.edge_id, jnp.zeros((1, t, t), tg.edge_id.dtype)]),
+        tile_src=jnp.concatenate(
+            [tg.tile_src, jnp.zeros((1,), tg.tile_src.dtype)]),
+        tile_dst=jnp.concatenate(
+            [tg.tile_dst, jnp.full((1,), last_dst, tg.tile_dst.dtype)]),
+        first_of_dst=jnp.concatenate(
+            [tg.first_of_dst, jnp.zeros((1,), tg.first_of_dst.dtype)]),
+        num_vertices=tg.num_vertices, num_edges=tg.num_edges,
+        tile_size=tg.tile_size)
+
+
+def active_tile_ids(tile_src: jnp.ndarray, active_blocks: jnp.ndarray,
+                    capacity: int, num_tiles: int) -> jnp.ndarray:
+    """Compact the ids of tiles whose SOURCE block is active into a
+    ``(capacity,)`` buffer, padded with ``num_tiles`` (the null tile).
+    Ascending ids, so a dst-sorted tile list stays dst-sorted."""
+    return jnp.nonzero(active_blocks[tile_src], size=capacity,
+                       fill_value=num_tiles)[0]
+
+
 def tile_stats(tg: TiledGraph) -> dict:
     """Reordering benchmark metrics (Fig. 5 analogue, TPU cost model)."""
     nblocks = tg.padded_vertices // tg.tile_size

@@ -173,6 +173,40 @@ def run_fused(g: Graph, starts: jnp.ndarray, num_colors: int,
     return TraversalResult(visited=visited, stats=stats)
 
 
+@partial(jax.jit, static_argnames=("num_colors", "max_levels"))
+def run_fused_block(g: Graph, starts: jnp.ndarray, seeds: jnp.ndarray,
+                    num_colors: int, max_levels: int = 64):
+    """Fused multi-batch sweep: ONE dispatch traverses a whole block of
+    batches via ``lax.map`` (sequential per batch — one (V, W) transient
+    at a time — so a pool build stops paying per-batch dispatch).
+
+    starts (B, C) int32 / seeds (B,) uint32 → (visited (B, V, W),
+    fused (B,), unfused (B,)) with the edge-visit totals equal to
+    ``run_fused``'s per-level stats summed (same int32 arithmetic).
+    """
+    def one(args):
+        st, sd = args
+        frontier = init_frontier(g.num_vertices, num_colors, st)
+        visited = jnp.zeros_like(frontier)
+
+        def cond(c):
+            fr, _, lvl, _, _ = c
+            return jnp.logical_and(bitmask.any_set(fr), lvl < max_levels)
+
+        def body(c):
+            fr, vis, lvl, fused, unfused = c
+            nf, nv, info = fused_step(g, fr, vis, lvl, sd)
+            return (nf, nv, lvl + 1, fused + info["fused_visits"],
+                    unfused + info["unfused_visits"])
+
+        fr, vis, _, fused, unfused = jax.lax.while_loop(
+            cond, body,
+            (frontier, visited, jnp.int32(0), jnp.int32(0), jnp.int32(0)))
+        return vis | fr, fused, unfused
+
+    return jax.lax.map(one, (starts, seeds))
+
+
 @partial(jax.jit, static_argnames=("color_id", "max_levels"))
 def run_single_color(g: Graph, start: jnp.ndarray, color_id: int,
                      seed: jnp.ndarray, max_levels: int = 64) -> TraversalResult:

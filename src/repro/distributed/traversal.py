@@ -127,12 +127,73 @@ def distributed_greedy_max_cover(visited: jnp.ndarray, k: int,
 
 
 # ------------------------------------------------------------- graph parallel
-def _frontier_gather_loop(expand, frontier_local, max_levels: int, axis: str):
+def gather_capacity_words(rows: int, num_words: int, capacity: int = 0) -> int:
+    """Per-shard capacity (packed words) of the sparse frontier all-gather.
+
+    ``capacity = 0`` (auto) budgets an eighth of the shard's ``rows × W``
+    words, rounded up to a power of two — levels above it (the dense early
+    levels of Fig. 9) take the full all-gather, levels below it (the
+    collapsed tail, where ButterFly BFS shows full gathers waste
+    bandwidth) ship only the active words."""
+    n = rows * num_words
+    want = capacity if capacity > 0 else max(n // 8, 1)
+    k = 1
+    while k < min(want, n):
+        k *= 2
+    return min(k, n)
+
+
+def _frontier_gather_loop(expand, frontier_local, max_levels: int, axis: str,
+                          num_shards: int = 1, sparse_words: int = 0):
     """THE graph-parallel level loop: per-level frontier all-gather over
     ``axis``, local expansion, psum-agreed termination.  ``expand`` maps
     (fr_global (Vp, W), vis_local (rows, W), level) → new local frontier.
     Returns (visited_local, levels).  Every collective names only ``axis``,
-    so data-sharded batches run their loops independently on one mesh."""
+    so data-sharded batches run their loops independently on one mesh.
+
+    ``sparse_words > 0`` arms the sparse-frontier leg: each level, every
+    shard counts its nonzero frontier words and a pmax over ``axis``
+    agrees on the global maximum; when it fits the capacity, shards
+    compact their frontier to ``(active_word_idx, word)`` pairs, all-gather
+    THOSE (``2 × S × sparse_words`` words instead of ``S × rows × W``),
+    and rebuild the global mask with one packed unique scatter
+    (`bitmask.scatter_or_words` fast path — global indices are disjoint
+    per shard, pad slots target a scratch region).  Overflowing levels
+    fall back to the dense all-gather via ``lax.cond`` — the pmax'd count
+    is replicated, so every shard takes the same branch.  Either leg
+    reconstructs the exact global frontier: bit-identical by construction.
+    """
+    rows, num_words = frontier_local.shape
+    n = rows * num_words
+
+    def dense_gather(fr):
+        return jax.lax.all_gather(fr, axis, tiled=True)
+
+    def sparse_gather(fr):
+        k = sparse_words
+        flat = fr.reshape(-1)
+        idx = jnp.nonzero(flat, size=k, fill_value=n)[0].astype(jnp.int32)
+        w = jnp.where(idx < n, flat[jnp.minimum(idx, n - 1)], jnp.uint32(0))
+        shard = jax.lax.axis_index(axis).astype(jnp.int32)
+        # Pad slots target a per-(shard, slot) scratch word past the real
+        # rows, keeping EVERY scattered index globally unique (the packed
+        # fast path's contract).
+        pad_pos = shard * k + jnp.arange(k, dtype=jnp.int32)
+        gidx = jnp.where(idx < n, shard * n + idx,
+                         num_shards * n + pad_pos)
+        # ONE collective for (indices, words): the tail levels this leg
+        # targets are launch-latency-bound (payloads are tiny), so the
+        # pair rides a single stacked gather.
+        pair = jnp.stack([gidx.astype(jnp.uint32), w])       # (2, k)
+        allp = jax.lax.all_gather(pair, axis)                # (S, 2, k)
+        gi = allp[:, 0, :].reshape(-1).astype(jnp.int32)     # (S·k,)
+        gw = allp[:, 1, :].reshape(-1)                       # (S·k,)
+        rows_g = num_shards * rows
+        scratch = -(-(num_shards * k) // num_words)
+        buf = jnp.zeros((rows_g + scratch, num_words), jnp.uint32)
+        full = bitmask.scatter_or_words(buf, gi // num_words,
+                                        gi % num_words, gw, unique=True)
+        return full[:rows_g]
 
     def cond(carry):
         fr, _, lvl = carry
@@ -143,8 +204,13 @@ def _frontier_gather_loop(expand, frontier_local, max_levels: int, axis: str):
     def body(carry):
         fr, vis, lvl = carry
         vis = vis | fr
-        # THE collective: gather every shard's (rows, W) frontier words.
-        fr_global = jax.lax.all_gather(fr, axis, tiled=True)
+        if sparse_words and sparse_words < n:
+            nz = jnp.count_nonzero(fr).astype(jnp.int32)
+            fits = jax.lax.pmax(nz, axis) <= sparse_words
+            fr_global = jax.lax.cond(fits, sparse_gather, dense_gather, fr)
+        else:
+            # THE collective: gather every shard's (rows, W) frontier words.
+            fr_global = dense_gather(fr)
         nf = expand(fr_global, vis, lvl.astype(jnp.uint32))
         return nf, vis, lvl + 1
 
@@ -201,7 +267,8 @@ def graph_parallel_traversal(ptg: part_lib.PartitionedTiledGraph,
                 * ptg_local.blocks_per_shard)
         expand = _local_expand(ptg_local, "ic", None, seed, base,
                                num_colors)
-        return _frontier_gather_loop(expand, frontier_local, max_levels, axis)
+        return _frontier_gather_loop(expand, frontier_local, max_levels,
+                                     axis, num_shards=ptg.num_shards)
 
     fn = shard_map(
         body, mesh=mesh,
@@ -215,7 +282,8 @@ def graph_parallel_traversal(ptg: part_lib.PartitionedTiledGraph,
 def graph_parallel_block(ptg: part_lib.PartitionedTiledGraph, mesh: Mesh, *,
                          data_axis: str = "data", model_axis: str = "model",
                          num_colors: int, max_levels: int = 64,
-                         diffusion: str = "ic"):
+                         diffusion: str = "ic", frontier: str = "dense",
+                         gather_capacity: int = 0):
     """Build the 2-D (data × model) fused-BPT block program.
 
     The composition the `repro.sampling` ``graph_parallel`` backend runs:
@@ -238,12 +306,21 @@ def graph_parallel_block(ptg: part_lib.PartitionedTiledGraph, mesh: Mesh, *,
     BUILD-time ``ptg``, so the value passed at call time must be that same
     partition (the `repro.sampling` sampler caches exactly one and binds
     both sides; rebuild the program if you re-partition).
+
+    ``frontier="sparse"`` arms the sparse-frontier all-gather leg of
+    `_frontier_gather_loop` (compacted (word_idx, word) pairs whenever the
+    pmax'd active-word count fits ``gather_capacity`` words per shard,
+    `gather_capacity_words` default) — same bits, less model-axis traffic
+    on the collapsed late levels.
     """
     from repro.distributed.compat import shard_map
 
     v, vp = ptg.num_vertices, ptg.padded_vertices
     rows, tile = ptg.rows_per_shard, ptg.tile_size
     tile_specs = part_lib.partition_specs(ptg, model_axis)
+    sparse_words = (gather_capacity_words(rows, bitmask.num_words(num_colors),
+                                          gather_capacity)
+                    if frontier == "sparse" else 0)
 
     def block_body(ptg_local, cb_local, starts_local, seeds_local):
         base = (jax.lax.axis_index(model_axis).astype(jnp.int32)
@@ -257,7 +334,9 @@ def graph_parallel_block(ptg: part_lib.PartitionedTiledGraph, mesh: Mesh, *,
             expand = _local_expand(ptg_local, diffusion, cb_local, seed,
                                    base, num_colors)
             vis, _ = _frontier_gather_loop(expand, fr_local, max_levels,
-                                           model_axis)
+                                           model_axis,
+                                           num_shards=ptg.num_shards,
+                                           sparse_words=sparse_words)
             return vis
 
         # Sequential over the shard's local batch slice: one traversal's

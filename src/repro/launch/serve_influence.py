@@ -9,7 +9,10 @@
 
 ``--diffusion ic|lt`` and ``--sampler-backend dense|tiled|kernel|
 data_parallel|graph_parallel`` select the `repro.sampling.SamplerSpec` the
-pool samples under.  Backend defaults: ``dense`` single-device; on a
+pool samples under; ``--frontier sparse`` arms the sparse-frontier
+execution mode (per-level active-tile compaction, and on graph_parallel a
+compacted frontier all-gather — bit-identical to dense, work proportional
+to the live frontier; ``--frontier-capacity`` tunes its buckets).  Backend defaults: ``dense`` single-device; on a
 ``--mesh DxM`` mesh, ``data_parallel`` when M == 1 (shard_map batch blocks,
 each shard's slots built on its own devices) and **graph parallelism when
 M > 1**: the graph's destination rows shard over the ``model`` axis (size
@@ -91,14 +94,19 @@ def build_config(args, *, backend: str | None = None) -> PoolConfig:
     BOTH serving paths."""
     backend = backend or args.sampler_backend or "dense"
     spec = SamplerSpec(diffusion=args.diffusion, backend=backend,
-                       num_colors=args.colors, master_seed=args.master_seed)
+                       num_colors=args.colors, master_seed=args.master_seed,
+                       frontier=args.frontier,
+                       frontier_capacity=args.frontier_capacity)
     return PoolConfig(max_batches=args.max_batches,
                       memory_budget_mb=args.memory_budget_mb, spec=spec)
 
 
 def dense_variant(cfg: PoolConfig) -> PoolConfig:
-    """Same pool under the single-device dense backend (reference path)."""
-    return dataclasses.replace(cfg, spec=cfg.spec.replace(backend="dense"))
+    """Same pool under the single-device dense backend AND dense frontier
+    (reference path) — with ``--frontier sparse`` the smoke's bit-identity
+    assertions become a sparse-vs-dense equivalence check too."""
+    return dataclasses.replace(
+        cfg, spec=cfg.spec.replace(backend="dense", frontier="dense"))
 
 
 def build_store(args) -> SketchStore:
@@ -366,6 +374,14 @@ def main():
                          "on a --mesh DxM: data_parallel when M==1, "
                          "graph_parallel — rows sharded over the model "
                          "axis — when M>1)")
+    ap.add_argument("--frontier", choices=("dense", "sparse"),
+                    default="dense",
+                    help="per-level execution mode: sparse compacts each "
+                         "level to the active tiles (bit-identical, work "
+                         "scales with the live frontier)")
+    ap.add_argument("--frontier-capacity", type=int, default=0,
+                    help="sparse capacity knob (0 = auto bucket ladder; "
+                         "see benchmarks/bench_frontier_profile.py)")
     ap.add_argument("--n", type=int, default=300)
     ap.add_argument("--degree", type=float, default=6.0)
     ap.add_argument("--prob", type=float, default=0.25)

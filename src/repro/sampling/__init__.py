@@ -23,10 +23,10 @@ batch_index)`` yields bit-identical visited masks on every backend that
 supports the diffusion.
 """
 from repro.sampling.sampler import Sampler, make_sampler
-from repro.sampling.spec import (BACKENDS, DIFFUSIONS, SamplerSpec,
-                                 resolve_spec, spec_from_sample_kw,
-                                 supported)
+from repro.sampling.spec import (BACKENDS, DIFFUSIONS, FRONTIERS,
+                                 SamplerSpec, resolve_spec,
+                                 spec_from_sample_kw, supported)
 
-__all__ = ["BACKENDS", "DIFFUSIONS", "Sampler", "SamplerSpec",
+__all__ = ["BACKENDS", "DIFFUSIONS", "FRONTIERS", "Sampler", "SamplerSpec",
            "make_sampler", "resolve_spec", "spec_from_sample_kw",
            "supported"]

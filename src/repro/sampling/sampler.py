@@ -94,6 +94,19 @@ class Sampler:
         """(B, V, W) stacked visited masks for the given batch indices."""
         return rrr.stack_visited(self.sample_many(batch_indices))
 
+    # -------------------------------------------- sparse-frontier shared
+    def _sparse_index(self, cb=None):
+        """(FrontierIndex, bucket ladder) for ``spec.frontier == "sparse"``
+        — ONE construction path for every backend that compacts edge
+        blocks (tile_rows follows ``spec.tile_size``, capacity follows
+        ``spec.frontier_capacity``).  ``cb`` attaches the LT
+        selection-CDF prefixes."""
+        from repro.core import sparse
+        fidx = sparse.build_frontier_index(
+            self.g_rev, tile_rows=self.spec.tile_size, cb=cb)
+        return fidx, sparse.bucket_ladder(fidx.num_blocks,
+                                          self.spec.frontier_capacity)
+
     # ------------------------------------------------- mesh-backend shared
     def _block_inputs(self, idx: list[int], shards: int):
         """(padded_len, starts (Bp, C), seeds (Bp,)) for a block padded to a
@@ -111,13 +124,92 @@ class Sampler:
 
 
 class DenseSampler(Sampler):
-    """CSR edge-centric path — IC and LT."""
+    """CSR edge-centric path — IC and LT.
 
+    ``spec.frontier == "sparse"`` swaps the per-level edge sweep for the
+    `core.sparse` active-tile compaction engine (edge blocks grouped by
+    source row-block, gathered per level through a capacity-bucket
+    ladder) — bit-identical masks AND work counters, per-level cost
+    proportional to the live frontier instead of E.
+
+    ``sample_many`` fuses the whole block into ONE dispatch (``lax.map``
+    over batches inside one jit — `traversal.run_fused_block` /
+    `sparse.sparse_block` / `lt.run_fused_lt_block`), so pool builds and
+    refreshes stop paying per-batch dispatch.  IC blocks keep real
+    edge-visit totals; LT carries the usual -1 sentinel.
+    """
+
+    def __init__(self, g, spec, *, g_rev=None):
+        super().__init__(g, spec, g_rev=g_rev)
+        self._fidx = None
+        self._ladder = None
+        self._cb = None
+
+    # ----------------------------------------------------- lazy indexes
+    def _lt_cb(self):
+        if self._cb is None:
+            self._cb = jnp.asarray(lt.selection_cum_before(self.g_rev))
+        return self._cb
+
+    def _frontier_index(self):
+        if self._fidx is None:
+            cb = (np.asarray(self._lt_cb())
+                  if self.spec.diffusion == "lt" else None)
+            self._fidx, self._ladder = self._sparse_index(cb)
+        return self._fidx
+
+    # -------------------------------------------------------- sampling
     def sample(self, batch_index: int) -> rrr.RRRBatch:
+        if self.spec.frontier == "sparse":
+            from repro.core import sparse
+            fidx = self._frontier_index()
+            starts = self.batch_starts(batch_index)
+            seed = self.batch_seed(batch_index)
+            if self.spec.diffusion == "lt":
+                visited = sparse.run_fused_lt_sparse(
+                    fidx, starts, self.spec.num_colors, seed,
+                    max_levels=self.spec.max_iters, ladder=self._ladder)
+                return rrr.RRRBatch(visited, np.asarray(starts),
+                                    int(batch_index), -1, -1)
+            res = sparse.run_fused_sparse(
+                fidx, starts, self.spec.num_colors, seed,
+                max_levels=self.spec.max_iters, ladder=self._ladder)
+            return rrr.RRRBatch(
+                res.visited, np.asarray(starts), int(batch_index),
+                int(res.stats.fused_edge_visits.sum()),
+                int(res.stats.unfused_edge_visits.sum()))
         return rrr.sample_batch(
             self.g_rev, self.spec.num_colors, self.spec.master_seed,
             int(batch_index), sort_starts=self.spec.sort_starts,
             max_levels=self.spec.max_iters, model=self.spec.diffusion)
+
+    def sample_many(self, batch_indices) -> list[rrr.RRRBatch]:
+        idx = [int(b) for b in batch_indices]
+        if len(idx) <= 1:
+            return [self.sample(b) for b in idx]
+        starts = jnp.stack([self.batch_starts(b) for b in idx])
+        seeds = jnp.asarray(rrr.batch_seeds(self.spec.master_seed, idx))
+        spec = self.spec
+        if spec.frontier == "sparse":
+            from repro.core import sparse
+            fidx = self._frontier_index()
+            vis, fused, unfused = sparse.sparse_block(
+                fidx, starts, seeds, spec.num_colors, spec.max_iters,
+                self._ladder, diffusion=spec.diffusion)
+        elif spec.diffusion == "lt":
+            vis = lt.run_fused_lt_block(self.g_rev, self._lt_cb(), starts,
+                                        seeds, spec.num_colors,
+                                        max_levels=spec.max_iters)
+            fused = unfused = np.full(len(idx), -1)
+        else:
+            from repro.core import traversal
+            vis, fused, unfused = traversal.run_fused_block(
+                self.g_rev, starts, seeds, spec.num_colors,
+                max_levels=spec.max_iters)
+        roots = np.asarray(starts)
+        return [rrr.RRRBatch(vis[i], roots[i], b, int(fused[i]),
+                             int(unfused[i]))
+                for i, b in enumerate(idx)]
 
 
 def _tile_graph(g_rev: csr.Graph, spec: SamplerSpec) -> tiles.TiledGraph:
@@ -139,7 +231,12 @@ class TiledSampler(Sampler):
     counter RNG is keyed by *CSR edge id* (IC) / global destination vertex
     (LT selection), so results stay bit-identical to the dense path.
     Requires a parallel-edge-free graph
-    (``csr.from_edges(..., dedupe=True)``)."""
+    (``csr.from_edges(..., dedupe=True)``).
+
+    ``spec.frontier == "sparse"`` compacts each level's expansion to the
+    tiles with an active source block (`tiled_traversal` sparse legs) —
+    the Pallas kernel grid then iterates exactly the compacted tile list.
+    """
 
     def __init__(self, g, spec, *, g_rev=None):
         super().__init__(g, spec, g_rev=g_rev)
@@ -149,13 +246,29 @@ class TiledSampler(Sampler):
         self._cb_tiles = (jnp.asarray(tiles.edge_values_to_tiles(
             self.tg_rev, lt.selection_cum_before(self.g_rev)))
             if spec.diffusion == "lt" else None)
+        if spec.frontier == "sparse":
+            from repro.core import sparse
+            self._ladder = sparse.bucket_ladder(self.tg_rev.num_tiles,
+                                                spec.frontier_capacity)
 
     def sample(self, batch_index: int) -> rrr.RRRBatch:
-        if self.spec.diffusion == "lt":
+        spec = self.spec
+        if spec.diffusion == "lt":
             starts = self.batch_starts(batch_index)
             visited, _ = tiled_traversal.run_fused_lt_tiled(
-                self.tg_rev, self._cb_tiles, starts, self.spec.num_colors,
-                self.batch_seed(batch_index), max_levels=self.spec.max_iters)
+                self.tg_rev, self._cb_tiles, starts, spec.num_colors,
+                self.batch_seed(batch_index), max_levels=spec.max_iters,
+                frontier=spec.frontier,
+                ladder=self._ladder if spec.frontier == "sparse" else None)
+            return rrr.RRRBatch(visited, np.asarray(starts),
+                                int(batch_index), -1, -1)
+        if spec.frontier == "sparse":
+            starts = self.batch_starts(batch_index)
+            visited, _ = tiled_traversal.run_fused_tiled(
+                self.tg_rev, starts, spec.num_colors,
+                self.batch_seed(batch_index), max_levels=spec.max_iters,
+                use_kernel=(spec.backend == "kernel"), frontier="sparse",
+                ladder=self._ladder)
             return rrr.RRRBatch(visited, np.asarray(starts),
                                 int(batch_index), -1, -1)
         return rrr.sample_batch(
@@ -222,6 +335,9 @@ class DataParallelSampler(_BlockSampler):
         self.axis = spec.mesh_axis
         self._cb = (jnp.asarray(lt.selection_cum_before(self.g_rev))
                     if spec.diffusion == "lt" else None)
+        if spec.frontier == "sparse":
+            self._fidx, self._ladder = self._sparse_index(
+                None if self._cb is None else np.asarray(self._cb))
         self._block_fns: dict[int, object] = {}
 
     @property
@@ -241,6 +357,20 @@ class DataParallelSampler(_BlockSampler):
             g, spec, cb = self.g_rev, self.spec, self._cb
 
             def one(starts, seed):
+                if spec.frontier == "sparse":
+                    # The sparse engine is fully traced (capacity-bucket
+                    # conds are shard-local — no collectives), so it drops
+                    # straight into the shard_map body; fidx rides along
+                    # replicated like the graph.
+                    from repro.core import sparse
+                    if spec.diffusion == "lt":
+                        return sparse.run_fused_lt_sparse(
+                            self._fidx, starts, spec.num_colors, seed,
+                            max_levels=spec.max_iters, ladder=self._ladder)
+                    return sparse.run_fused_sparse(
+                        self._fidx, starts, spec.num_colors, seed,
+                        max_levels=spec.max_iters,
+                        ladder=self._ladder).visited
                 if spec.diffusion == "lt":
                     sel = lt.selection_mask_from_cb(g, cb, spec.num_colors,
                                                     seed)
@@ -337,7 +467,9 @@ class GraphParallelSampler(_BlockSampler):
                 model_axis=self.model_axis,
                 num_colors=self.spec.num_colors,
                 max_levels=self.spec.max_iters,
-                diffusion=self.spec.diffusion)
+                diffusion=self.spec.diffusion,
+                frontier=self.spec.frontier,
+                gather_capacity=self.spec.frontier_capacity)
         return self._fn
 
     def _block(self, idx: list[int]):

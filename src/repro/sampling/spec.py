@@ -27,6 +27,7 @@ import warnings
 
 DIFFUSIONS = ("ic", "lt")
 BACKENDS = ("dense", "tiled", "kernel", "data_parallel", "graph_parallel")
+FRONTIERS = ("dense", "sparse")
 
 # (diffusion, backend) pairs with an implementation behind them.  LT has no
 # Pallas kernel yet: its live-edge selection is per-(dst, color), not
@@ -53,6 +54,19 @@ class SamplerSpec:
     ``graph_parallel`` its sample axis); ``model_axis`` is the
     ``graph_parallel`` row-partition axis — destination rows shard over it
     and the per-level frontier all-gather runs on it alone.
+
+    ``frontier`` selects the per-level execution mode — ``"dense"`` sweeps
+    every edge/tile every level; ``"sparse"`` compacts each level to the
+    active source tiles (`core.sparse` — per-level work scales with the
+    live frontier instead of E) and, on ``graph_parallel``, additionally
+    all-gathers a compacted frontier representation when it fits.  The two
+    modes are **bit-identical**; sparse only changes what gets computed,
+    never what comes out.  ``frontier_capacity`` tunes the sparse capacity
+    buckets (0 = auto ladder): the active-tile compaction buffer size for
+    the single-device / data_parallel engines, the per-shard packed-word
+    budget of the sparse all-gather for ``graph_parallel``
+    (`benchmarks/bench_frontier_profile.py` prints the occupancy histogram
+    to set it from).
     """
     diffusion: str = "ic"
     backend: str = "dense"
@@ -63,6 +77,8 @@ class SamplerSpec:
     tile_size: int = 128
     mesh_axis: str = "data"
     model_axis: str = "model"
+    frontier: str = "dense"
+    frontier_capacity: int = 0
 
     def __post_init__(self):
         if self.diffusion not in DIFFUSIONS:
@@ -77,6 +93,10 @@ class SamplerSpec:
                 f"{sorted(_SUPPORTED)}")
         if self.num_colors < 1 or self.max_iters < 1 or self.tile_size < 1:
             raise ValueError("num_colors / max_iters / tile_size must be ≥ 1")
+        if self.frontier not in FRONTIERS:
+            raise ValueError(f"frontier {self.frontier!r} not in {FRONTIERS}")
+        if self.frontier_capacity < 0:
+            raise ValueError("frontier_capacity must be ≥ 0 (0 = auto)")
         if self.backend == "graph_parallel" \
                 and self.mesh_axis == self.model_axis:
             raise ValueError(

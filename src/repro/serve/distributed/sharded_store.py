@@ -34,6 +34,12 @@ and every per-level collective (frontier all-gather) names only ``model``
 — graphs bigger than one device's memory build pools at all, and the
 resulting slots are still bit-identical to a 1-device dense pool.
 
+Refresh reuses the pool allocation: the base class's donated-buffer slot
+scatter (`sketch_store._set_slots`) rewrites only the refreshed slots of
+the sharded stack in place — untouched shards' blocks never move, and the
+whole pool is never re-staged from host (the `BENCH_pool_build.json`
+``refresh_s ≈ build_s`` fix).
+
 Persistence: snapshots are written through the same manifest format as the
 base class, with the shard layout recorded in the manifest's ``extra``
 metadata.  Because leaves are *global* (slot-ordered) arrays, a snapshot

@@ -32,8 +32,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from functools import partial
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -79,6 +81,16 @@ class PoolConfig:
         return dataclasses.replace(
             self, master_seed=master_seed,
             spec=self.spec.replace(master_seed=master_seed))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _set_slots(stack: jnp.ndarray, slots: jnp.ndarray,
+               masks: jnp.ndarray) -> jnp.ndarray:
+    """``stack[slots] = masks`` with the stack buffer DONATED — a refresh
+    rewrites the touched slots in the existing pool allocation instead of
+    re-staging the whole ``(B, V, W)`` stack (sharded stacks keep their
+    sharding: the scatter only writes the owning shards' slot blocks)."""
+    return stack.at[slots].set(masks)
 
 
 class SketchStore:
@@ -181,12 +193,32 @@ class SketchStore:
         return self._stack
 
     # ------------------------------------------------------------ refresh
+    def _update_stack(self, slots: list[int],
+                      new_batches: list[rrr.RRRBatch]) -> None:
+        """Write refreshed slots into the cached stack IN PLACE (donated
+        buffer — `_set_slots`).  A refresh never changes the pool's shape,
+        so the existing ``(B, V, W)`` allocation (and, in the sharded
+        subclass, its per-device placement) is reused; only the touched
+        slots transit a device.  No-op while the stack is unbuilt (lazy).
+
+        Donation contract: the previously-returned ``visited_stack()``
+        array object is consumed — consumers must re-fetch per query (the
+        query engines already do).
+        """
+        if self._stack is None:
+            return
+        masks = jnp.stack([jnp.asarray(b.visited) for b in new_batches])
+        self._stack = _set_slots(self._stack,
+                                 jnp.asarray(slots, jnp.int32), masks)
+
     def refresh(self, fraction: float = 0.25) -> list[int]:
         """Resample the oldest-epoch batches with fresh RNG streams.
 
         Bumps the store epoch, then replaces ``ceil(fraction · B)`` batches
         (oldest epoch tag first, lowest slot on ties) with new samples drawn
         at never-before-used batch indices.  Returns the replaced slots.
+        The cached visited stack is updated in place (`_update_stack`) —
+        a refresh reuses the pool allocation instead of re-staging it.
         """
         if not self.batches:
             return []
@@ -196,10 +228,11 @@ class SketchStore:
         order = sorted(range(len(self.batches)),
                        key=lambda i: (self.batch_epochs[i], i))
         slots = order[:count]
-        for i, b in zip(slots, self._sample_block(self._take_indices(count))):
+        new = self._sample_block(self._take_indices(count))
+        for i, b in zip(slots, new):
             self.batches[i] = b
             self.batch_epochs[i] = self.epoch
-        self._stack = None
+        self._update_stack(slots, new)
         return slots
 
     # -------------------------------------------------------- persistence

@@ -267,6 +267,50 @@ def main():
         assert r_def.spec == gp.spec
     print("OK graph_parallel_manifest")
 
+    # ---- sparse frontier on real multi-device meshes ≡ dense --------------
+    # The sparse execution mode end to end on forced devices: compacted
+    # per-level expansion inside shard_map bodies (data_parallel, 8 shards)
+    # and the compacted (word_idx, word) frontier all-gather over the model
+    # axis (graph_parallel, 2×4 — a tiny gather capacity forces the sparse
+    # leg at every level that fits).  Pools must stay bit-identical to the
+    # dense-frontier dense-backend reference, and the donated-buffer
+    # refresh must keep them that way with the stack already staged.
+    for diffusion in ("ic", "lt"):
+        ref = SketchStore(
+            g2, PoolConfig(max_batches=32,
+                           spec=sampling.SamplerSpec(diffusion=diffusion,
+                                                     num_colors=64,
+                                                     master_seed=3)))
+        ref.ensure(8)
+        mesh_24 = jax.make_mesh((2, 4), ("data", "model"))
+        stores = [
+            ShardedSketchStore(
+                g2, PoolConfig(max_batches=32, spec=sampling.SamplerSpec(
+                    diffusion=diffusion, backend="data_parallel",
+                    num_colors=64, master_seed=3, frontier="sparse")),
+                mesh8),
+            ShardedSketchStore(
+                g2, PoolConfig(max_batches=32, spec=sampling.SamplerSpec(
+                    diffusion=diffusion, backend="graph_parallel",
+                    num_colors=64, master_seed=3, frontier="sparse",
+                    frontier_capacity=4)), mesh_24),
+        ]
+        for st in stores:
+            st.ensure(8)
+            st.visited_stack()          # arm the in-place refresh path
+        ref.refresh(0.5)
+        for st in stores:
+            st.refresh(0.5)
+            for a, b in zip(ref.batches, st.batches):
+                assert a.batch_index == b.batch_index
+                np.testing.assert_array_equal(np.asarray(a.visited),
+                                              np.asarray(b.visited))
+            s_sp, sig_sp = DistributedQueryEngine(st).top_k(4)
+            s_rf, sig_rf = QueryEngine(ref).top_k(4)
+            np.testing.assert_array_equal(s_sp, s_rf)
+            assert sig_sp == sig_rf
+    print("OK sparse_frontier")
+
     # ---- async front-end: deadline flush, concurrency, refresh ------------
     deadline = 0.2
     engine = DistributedQueryEngine(sharded)

@@ -65,3 +65,21 @@ def test_scatter_or_words_duplicate_indices():
     out = np.asarray(bitmask.scatter_or_words(dst, rows, words, vals))
     assert out[2, 1] == 0b11
     assert out[0, 0] == 0xF
+
+
+def test_scatter_or_words_unique_fast_path_matches_general():
+    """The packed ``unique=True`` fast path (1× index traffic) must equal
+    the 32×-unpacked general path whenever every (row, word) target is
+    distinct — including OR-ing into already-set destination bits."""
+    rng = np.random.default_rng(0)
+    rows_n, words_n, k = 64, 2, 40
+    flat = rng.choice(rows_n * words_n, size=k, replace=False)
+    rows = jnp.asarray(flat // words_n, jnp.int32)
+    words = jnp.asarray(flat % words_n, jnp.int32)
+    vals = jnp.asarray(rng.integers(0, 2 ** 32, k, np.uint32))
+    dst = jnp.asarray(rng.integers(0, 2 ** 32, (rows_n, words_n), np.uint32))
+    slow = bitmask.scatter_or_words(dst, rows, words, vals)
+    fast = bitmask.scatter_or_words(dst, rows, words, vals, unique=True)
+    np.testing.assert_array_equal(np.asarray(slow), np.asarray(fast))
+    # OR semantics, not overwrite: pre-set bits survive
+    assert np.all(np.asarray(fast) & np.asarray(dst) == np.asarray(dst))

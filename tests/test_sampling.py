@@ -161,6 +161,122 @@ def test_mesh_backends_require_mesh_and_axes(graph):
             mesh=jax.make_mesh((1,), ("data",)))
 
 
+# -------------------------------------------------- sparse frontier mode
+def test_sparse_frontier_bit_identical_across_matrix(graph):
+    """frontier="sparse" must be BIT-identical to the dense path on every
+    single-process cell of the (diffusion × backend) matrix — compaction
+    changes what gets computed, never what comes out."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for diffusion in ("ic", "lt"):
+        backends = ["dense", "tiled"] + (["kernel"] if diffusion == "ic"
+                                         else [])
+        ref = sampling.make_sampler(graph, sampling.SamplerSpec(
+            diffusion=diffusion, num_colors=64, master_seed=5))
+        for backend in backends + ["graph_parallel"]:
+            spec = sampling.SamplerSpec(
+                diffusion=diffusion, backend=backend, num_colors=64,
+                master_seed=5, frontier="sparse")
+            m = mesh if backend == "graph_parallel" else None
+            s = sampling.make_sampler(graph, spec, mesh=m)
+            for bi in (0, 2):
+                got = s.sample(bi)
+                want = ref.sample(bi)
+                np.testing.assert_array_equal(np.asarray(got.visited),
+                                              np.asarray(want.visited))
+                np.testing.assert_array_equal(got.roots,
+                                              np.asarray(want.roots))
+
+
+def test_sparse_frontier_work_counters_equal_dense(graph):
+    """The deterministic work-proportionality contract: sparse counts
+    exactly the edges the dense sweep counts (an edge is visited iff its
+    source row carries an active color — all of which live in gathered
+    tiles), for single batches AND fused sample_many blocks."""
+    spec = sampling.SamplerSpec(num_colors=64, master_seed=5)
+    dense = sampling.make_sampler(graph, spec)
+    sparse_ = sampling.make_sampler(graph, spec.replace(frontier="sparse"))
+    for a, b in zip(dense.sample_many([0, 1, 2]),
+                    sparse_.sample_many([0, 1, 2])):
+        assert a.fused_edge_visits == b.fused_edge_visits > 0
+        assert a.unfused_edge_visits == b.unfused_edge_visits
+        one = sparse_.sample(a.batch_index)       # single-batch path too
+        assert one.fused_edge_visits == a.fused_edge_visits
+
+
+def test_sparse_frontier_dead_frontier_and_all_active():
+    """Edge cases: a graph whose frontier dies immediately (every edge
+    prob 0 — level 1 is empty) and one where every tile is active by
+    level 1 (complete-ish, prob ~1 — compaction runs at the ladder's top
+    rung)."""
+    n = 40
+    src, dst = np.nonzero(~np.eye(n, dtype=bool))
+    for prob in (0.0, 0.999):
+        g = csr.from_edges(src, dst, np.full(len(src), prob, np.float32),
+                           n, dedupe=True)
+        for backend in ("dense", "tiled"):
+            spec = sampling.SamplerSpec(backend=backend, num_colors=64,
+                                        master_seed=3, tile_size=8)
+            ref = sampling.make_sampler(g, spec).sample(0)
+            got = sampling.make_sampler(
+                g, spec.replace(frontier="sparse")).sample(0)
+            np.testing.assert_array_equal(np.asarray(got.visited),
+                                          np.asarray(ref.visited))
+        if prob == 0.0:                 # only the start colors survive
+            assert np.count_nonzero(np.asarray(ref.visited)) <= 64
+
+
+def test_sparse_frontier_capacity_bucket_boundaries(graph):
+    """Every ladder shape — a 1-wide bottom rung, a two-rung explicit
+    capacity, the degenerate single top rung — must reproduce dense bits
+    AND stats exactly (the top rung always fits, so correctness never
+    depends on the knob)."""
+    from repro.core import sparse, traversal, rrr
+    g_rev = csr.transpose(graph)
+    fidx = sparse.build_frontier_index(g_rev, tile_rows=64)
+    starts = rrr.batch_starts(graph.num_vertices, 64, 5, 0)
+    seed = rrr.batch_seed(5, 0)
+    ref = traversal.run_fused(g_rev, starts, 64, seed)
+    nb = fidx.num_blocks
+    for ladder in ((1, nb), (2, 16, nb), (nb,),
+                   sparse.bucket_ladder(nb, capacity=7)):
+        res = sparse.run_fused_sparse(fidx, starts, 64, seed, ladder=ladder)
+        np.testing.assert_array_equal(np.asarray(res.visited),
+                                      np.asarray(ref.visited))
+        np.testing.assert_array_equal(
+            np.asarray(res.stats.fused_edge_visits),
+            np.asarray(ref.stats.fused_edge_visits))
+        np.testing.assert_array_equal(
+            np.asarray(res.stats.unfused_edge_visits),
+            np.asarray(ref.stats.unfused_edge_visits))
+        assert int(res.stats.levels_run) == int(ref.stats.levels_run)
+
+
+def test_sparse_frontier_padded_edge_blocks_inert(graph):
+    """Block padding (edge_block ∤ per-row-block edge counts) and the
+    appended null block must never contribute: a tiny edge_block maximizes
+    padding, and the visited mask still matches dense bit for bit."""
+    from repro.core import sparse, traversal, rrr
+    g_rev = csr.transpose(graph)
+    fidx = sparse.build_frontier_index(g_rev, tile_rows=32, edge_block=16)
+    assert int(np.asarray(fidx.blk_valid).sum()) == g_rev.padded_edges
+    assert not np.asarray(fidx.blk_valid[-1]).any()      # null block inert
+    starts = rrr.batch_starts(graph.num_vertices, 64, 5, 1)
+    seed = rrr.batch_seed(5, 1)
+    res = sparse.run_fused_sparse(fidx, starts, 64, seed)
+    ref = traversal.run_fused(g_rev, starts, 64, seed)
+    np.testing.assert_array_equal(np.asarray(res.visited),
+                                  np.asarray(ref.visited))
+
+
+def test_spec_validates_frontier_knobs():
+    with pytest.raises(ValueError, match="frontier"):
+        sampling.SamplerSpec(frontier="compact")
+    with pytest.raises(ValueError, match="frontier_capacity"):
+        sampling.SamplerSpec(frontier_capacity=-1)
+    spec = sampling.SamplerSpec(frontier="sparse", frontier_capacity=128)
+    assert sampling.SamplerSpec.from_manifest(spec.to_manifest()) == spec
+
+
 # ------------------------------------------------------------ PoolConfig
 def test_pool_config_resolves_default_spec():
     cfg = PoolConfig(num_colors=32, master_seed=6)

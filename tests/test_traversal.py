@@ -151,3 +151,37 @@ def test_stats_occupancy_bounds(small_graph):
     assert (occ >= 0).all() and (occ <= 1.0 + 1e-6).all()
     frac = np.asarray(res.stats.active_tile_frac)
     assert (frac >= 0).all() and (frac <= 1.0).all()
+
+
+def test_run_fused_block_matches_per_batch(small_graph):
+    """The fused multi-batch sweep (ONE lax.map dispatch — the pool-build
+    fast path) must reproduce per-batch run_fused exactly: visited masks
+    AND summed edge-visit counters."""
+    starts = jnp.stack([
+        traversal.random_starts(jax.random.key(k), small_graph.num_vertices,
+                                64) for k in range(3)])
+    seeds = jnp.asarray([7, 8, 9], jnp.uint32)
+    vis, fused, unfused = traversal.run_fused_block(small_graph, starts,
+                                                    seeds, 64)
+    for i in range(3):
+        ref = traversal.run_fused(small_graph, starts[i], 64, seeds[i])
+        np.testing.assert_array_equal(np.asarray(vis[i]),
+                                      np.asarray(ref.visited))
+        assert int(fused[i]) == int(np.asarray(
+            ref.stats.fused_edge_visits, np.int64).sum())
+        assert int(unfused[i]) == int(np.asarray(
+            ref.stats.unfused_edge_visits, np.int64).sum())
+
+
+def test_run_fused_lt_block_matches_per_batch(small_graph):
+    from repro.core import lt
+    g = lt.normalize_lt_weights(small_graph)
+    cb = jnp.asarray(lt.selection_cum_before(g))
+    starts = jnp.stack([
+        traversal.random_starts(jax.random.key(k), g.num_vertices, 64)
+        for k in range(2)])
+    seeds = jnp.asarray([3, 4], jnp.uint32)
+    vis = lt.run_fused_lt_block(g, cb, starts, seeds, 64)
+    for i in range(2):
+        ref = lt.run_fused_lt(g, starts[i], 64, seeds[i])
+        np.testing.assert_array_equal(np.asarray(vis[i]), np.asarray(ref))
