@@ -1,0 +1,180 @@
+"""SLO load generator: open-loop Poisson arrivals against the serving tier.
+
+Drives `repro.serve.tier.ServingTier` (admission → replica router →
+engines) with an **open-loop** arrival process: request times are drawn
+from a Poisson process per tenant *in advance* and submitted on schedule
+whether or not earlier requests have finished — the load a service
+actually faces, where clients don't politely wait (closed-loop generators
+hide queueing collapse by self-throttling; an open loop surfaces it as a
+growing p999).
+
+Tenant mix: ``tenants`` weight-splits ``offered_qps``; tenant0 is
+additionally capped by the cell's ``quota_qps`` token bucket, so tight
+cells measure the *shed* path (retry-after) while loose cells measure pure
+latency.  Each admitted query records submit→resolve latency via a future
+done-callback; sheds are counted, never retried (open loop).
+
+One row per (replicas × deadline_ms × quota_qps) cell, with
+p50/p99/p999/max latency, shed rate, and achieved vs offered qps, into the
+standard ``BENCH_serve_load.json`` shape.  On one CPU the replicas share
+silicon — the trajectory is the point: the same rows on a real device plot
+replica read-scaling, and quota × deadline cells map the SLO envelope.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+
+def _percentiles(lats_s: list[float]) -> dict:
+    if not lats_s:
+        return {"p50_ms": None, "p99_ms": None, "p999_ms": None,
+                "max_ms": None}
+    ms = np.sort(np.asarray(lats_s)) * 1e3
+    return {"p50_ms": round(float(np.percentile(ms, 50)), 2),
+            "p99_ms": round(float(np.percentile(ms, 99)), 2),
+            "p999_ms": round(float(np.percentile(ms, 99.9)), 2),
+            "max_ms": round(float(ms[-1]), 2)}
+
+
+def _schedule(tenants: dict[str, float], arrivals: int, n: int, seed: int):
+    """Merged per-tenant Poisson arrival schedule: [(t, tenant, query)]."""
+    rng = np.random.default_rng(seed)
+    events = []
+    total = sum(tenants.values())
+    for tenant, rate in tenants.items():
+        share = max(1, round(arrivals * rate / total))
+        gaps = rng.exponential(1.0 / rate, size=share)
+        t = 0.0
+        for g in gaps:
+            t += g
+            events.append((t, tenant, rng.integers(0, n, 3).tolist()))
+    events.sort(key=lambda e: e[0])
+    return events[:arrivals]
+
+
+def _drive_cell(tier, events, shed_error) -> dict:
+    """Submit ``events`` open-loop; returns latency/shed/served tallies."""
+    lats, lock = [], threading.Lock()
+    futs, shed = [], 0
+    t0 = time.perf_counter()
+    for t_arr, tenant, query in events:
+        now = time.perf_counter() - t0
+        if t_arr > now:
+            time.sleep(t_arr - now)
+        t_submit = time.monotonic()
+        try:
+            fut = tier.submit_sigma(tenant, query)
+        except shed_error:
+            shed += 1
+            continue
+
+        def record(f, t_submit=t_submit):
+            if f.cancelled() or f.exception() is not None:
+                return
+            with lock:
+                lats.append(time.monotonic() - t_submit)
+
+        fut.add_done_callback(record)
+        futs.append(fut)
+    for f in futs:
+        f.result(timeout=600)
+    wall = time.perf_counter() - t0
+    return {"lats": list(lats), "shed": shed, "admitted": len(futs),
+            "wall_s": wall}
+
+
+def run(n=500, deg=6.0, colors=64, batches=6, master_seed=0,
+        replica_counts=(1, 2), deadlines_ms=(10,), quota_qps=(5.0, 50.0),
+        offered_qps=60.0, arrivals=180, tenant_weights=(0.5, 0.3, 0.2),
+        out=print, json_path="BENCH_serve_load.json"):
+    from repro.graph import csr, generators
+    from repro.sampling import SamplerSpec
+    from repro.serve.influence import PoolConfig, SketchStore
+    from repro.serve.tier import ServingTier, ShedError
+
+    params = {"n": n, "deg": deg, "colors": colors, "batches": batches,
+              "master_seed": master_seed,
+              "replica_counts": list(replica_counts),
+              "deadlines_ms": list(deadlines_ms),
+              "quota_qps": list(quota_qps), "offered_qps": offered_qps,
+              "arrivals": arrivals, "tenant_weights": list(tenant_weights)}
+    g = csr.dedupe(generators.powerlaw_cluster(n, deg, prob=0.25, seed=29))
+    base = SketchStore(g, PoolConfig(
+        max_batches=max(batches, 8),
+        spec=SamplerSpec(num_colors=colors, master_seed=master_seed)))
+    t0 = time.perf_counter()
+    base.ensure(batches)
+    sample_s = time.perf_counter() - t0
+    base.visited_stack()                    # compile/stage outside the sweep
+
+    rows = []
+    cell_seed = 0
+    for replicas in replica_counts:
+        for deadline_ms in deadlines_ms:
+            for quota in quota_qps:
+                cell_seed += 1
+                tenants = {f"tenant{i}": offered_qps * w
+                           for i, w in enumerate(tenant_weights)}
+                events = _schedule(tenants, arrivals, n, seed=cell_seed)
+                tier = ServingTier.build(
+                    base.clone(), replicas=replicas, quota_qps=None,
+                    default_deadline=deadline_ms / 1e3)
+                # Cell quota meters tenant0 only: the cell's shed axis.
+                tier.set_quota("tenant0", rate=quota, burst=quota)
+                # Warm each replica's compiled σ program out of the path.
+                tier.gather([tier.submit_sigma(f"warm{i}", [0])
+                             for i in range(replicas)])
+                cell = _drive_cell(tier, events, ShedError)
+                snap = tier.snapshot()
+                tier.close()
+                offered = len(events)
+                row = {
+                    "replicas": replicas,
+                    "deadline_ms": deadline_ms,
+                    "quota_qps": quota,
+                    "offered_qps": round(offered / events[-1][0], 1),
+                    "arrivals": offered,
+                    "admitted": cell["admitted"],
+                    "shed": cell["shed"],
+                    "shed_rate": round(cell["shed"] / offered, 3),
+                    "achieved_qps": round(cell["admitted"] / cell["wall_s"],
+                                          1),
+                    "theta": base.num_samples,
+                    "sample_s": round(sample_s, 3),
+                    "flushes": sum(r["flushes"] for r in snap["replicas"]),
+                    "cache_hit_rate": round(
+                        float(np.mean([r["cache"]["hit_rate"]
+                                       for r in snap["replicas"]])), 3),
+                    **_percentiles(cell["lats"]),
+                }
+                rows.append(row)
+
+    out("# serve_load: replicas,deadline_ms,quota_qps,offered_qps,"
+        "achieved_qps,shed_rate,p50_ms,p99_ms,p999_ms")
+    for r in rows:
+        out(",".join(str(r[k]) for k in
+                     ("replicas", "deadline_ms", "quota_qps", "offered_qps",
+                      "achieved_qps", "shed_rate", "p50_ms", "p99_ms",
+                      "p999_ms")))
+
+    import jax
+    record = {"bench": "serve_load", "schema": 1,
+              "unix_time": int(time.time()),
+              "env": {"backend": jax.default_backend(),
+                      "devices": jax.device_count(),
+                      "jax": jax.__version__},
+              "params": params, "rows": rows}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=1)
+        out(f"# wrote {json_path} ({len(rows)} rows)")
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -16,7 +16,8 @@ def main() -> None:
                             bench_fused_vs_unfused, bench_frontier_profile,
                             bench_kernels, bench_imm, bench_scaling,
                             bench_serve_influence, bench_distributed_serve,
-                            bench_pool_build, bench_scatter_words, roofline)
+                            bench_serve_load, bench_pool_build,
+                            bench_scatter_words, roofline)
 
     sections = [
         ("Fig4 work savings / occupancy", lambda: bench_work_savings.run(
@@ -38,6 +39,9 @@ def main() -> None:
          lambda: bench_distributed_serve.run(
              n=600, batches=8, shard_counts=(1, 4, 8),
              deadlines_ms=(5, 25), clients=32)),
+        ("Serving tier SLO: open-loop load vs replicas × quota",
+         lambda: bench_serve_load.run(n=400, batches=4, arrivals=120,
+                                      offered_qps=60.0)),
         ("Pool build: backend × frontier × diffusion (8 forced CPU devices)",
          lambda: bench_pool_build.run(
              sweeps=bench_pool_build.standard_sweeps(low_n=1500, gp_n=600,

@@ -53,14 +53,25 @@ work_counter_guard() {
     python scripts/check_work_counters.py
 }
 
+# Serving-tier smoke: 2 tenants × 2 replicas through the production tier —
+# shed-rate (quota-starved tenant0 sheds with retry-after), replica
+# bit-identity vs a direct engine, and the mixed-epoch gather refusal are
+# all asserted inside the launcher smoke.
+tier_smoke() {
+    python -m repro.launch.serve_influence --smoke --tier \
+        --tenants 2 --replicas 2 --autoscale
+}
+
 if python -m pip install -e . ; then
     python -m pytest -x -q
     graph_parallel_smoke
     work_counter_guard
+    tier_smoke
 else
     echo "[ci] pip install failed; running from source tree" >&2
     export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
     python -m pytest -x -q
     graph_parallel_smoke
     work_counter_guard
+    tier_smoke
 fi

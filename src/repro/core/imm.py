@@ -41,18 +41,43 @@ def _log_comb(n: int, k: int) -> float:
     return (math.lgamma(n + 1) - math.lgamma(k + 1) - math.lgamma(n - k + 1))
 
 
+def _adjusted_ell(n: int, ell: float) -> float:
+    return ell * (1 + math.log(2) / math.log(n))
+
+
+def _lam_star_coeff(n: int, k: int, ell_adj: float) -> float:
+    """λ*(ε) = coeff / ε² (Tang et al. Thm 1); ``ell_adj`` pre-adjusted."""
+    alpha = math.sqrt(ell_adj * math.log(n) + math.log(2))
+    beta = math.sqrt((1 - 1 / math.e)
+                     * (_log_comb(n, k) + ell_adj * math.log(n) + math.log(2)))
+    return 2 * n * ((1 - 1 / math.e) * alpha + beta) ** 2
+
+
 def theta_bound(n: int, k: int, eps: float, ell: float = 1.0) -> int:
     """IMM λ*/LB worst-case sample count with LB = 1 (Tang et al. Thm 1).
 
     The driver uses the iterative LB estimation (``estimate_theta``); this
     closed form is the hard ceiling.
     """
-    ell = ell * (1 + math.log(2) / math.log(n))
-    alpha = math.sqrt(ell * math.log(n) + math.log(2))
-    beta = math.sqrt((1 - 1 / math.e)
-                     * (_log_comb(n, k) + ell * math.log(n) + math.log(2)))
-    lam_star = 2 * n * ((1 - 1 / math.e) * alpha + beta) ** 2 / eps ** 2
-    return int(math.ceil(lam_star))
+    return int(math.ceil(
+        _lam_star_coeff(n, k, _adjusted_ell(n, ell)) / eps ** 2))
+
+
+def eps_bound_for_theta(n: int, k: int, theta: int, ell: float = 1.0,
+                        opt_lb: float = 1.0) -> float:
+    """Coverage-error bound a pool of ``theta`` RRR samples certifies.
+
+    Exact inverse of the ``estimate_theta`` sample-count bound
+    (θ = ⌈λ*(ε)/LB⌉ with λ* ∝ 1/ε²): the smallest ε whose required θ the
+    pool already meets.  ``opt_lb`` is a lower bound on OPT (e.g. the
+    greedy σ̂ from a top-k query, which the serving tier's autoscaler
+    feeds in); the default 1 is the worst case.  Monotone in θ, so a
+    controller can grow/shrink a pool against a target ε without
+    re-running the sampling phase.
+    """
+    theta = max(int(theta), 1)
+    return math.sqrt(_lam_star_coeff(n, k, _adjusted_ell(n, ell))
+                     / (theta * max(opt_lb, 1.0)))
 
 
 def estimate_theta(g: csr.Graph, k: int, eps: float, ell: float = 1.0,
@@ -82,7 +107,7 @@ def estimate_theta(g: csr.Graph, k: int, eps: float, ell: float = 1.0,
                                  master_seed=master_seed)
     num_colors, master_seed = spec.num_colors, spec.master_seed
     n = g.num_vertices
-    ell = ell * (1 + math.log(2) / math.log(n))
+    ell = _adjusted_ell(n, ell)
     eps_prime = math.sqrt(2) * eps
     lam_prime = ((2 + 2 * eps_prime / 3)
                  * (_log_comb(n, k) + ell * math.log(n)
@@ -112,10 +137,7 @@ def estimate_theta(g: csr.Graph, k: int, eps: float, ell: float = 1.0,
         if n * cov >= (1 + eps_prime) * x:
             lb = n * cov / (1 + eps_prime)
             break
-    alpha = math.sqrt(ell * math.log(n) + math.log(2))
-    beta = math.sqrt((1 - 1 / math.e)
-                     * (_log_comb(n, k) + ell * math.log(n) + math.log(2)))
-    lam_star = 2 * n * ((1 - 1 / math.e) * alpha + beta) ** 2 / eps ** 2
+    lam_star = _lam_star_coeff(n, k, ell) / eps ** 2
     return int(math.ceil(lam_star / lb)), (batches if pool is None
                                            else pool.ensure(0))
 

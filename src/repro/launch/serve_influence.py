@@ -309,6 +309,121 @@ def run_distributed(args, shape: tuple[int, int]) -> None:
     print(f"[smoke] PASS in {time.time() - t0:.1f}s")
 
 
+# --------------------------------------------------------------------- tier
+def run_tier(args) -> None:
+    """Production serving tier: admission → replicas → autoscale → SLOs.
+
+    ``--tier --tenants N --replicas R [--autoscale]`` builds a warm pool,
+    fronts it with `repro.serve.tier.ServingTier` (N tenants with mixed
+    quotas over R bit-identical replicas), drives a burst of per-tenant
+    client threads, and prints the metrics snapshot.  With ``--smoke`` it
+    asserts the tier acceptance contract: sheds carry retry-after,
+    in-quota answers are bit-identical to a direct single-engine
+    `QueryEngine` on the same pool epoch, a mid-stream refresh never
+    yields a mixed-epoch reply, and (with ``--autoscale``) a scale event
+    is an epoch swap, not a rebuild.
+    """
+    from repro.serve.tier import EpochMixError, ServingTier, ShedError
+
+    if args.sampler_backend in ("data_parallel", "graph_parallel"):
+        raise SystemExit("--tier serves single-device replicas; mesh "
+                         "backends arrive with cross-process replicas")
+    t0 = time.time()
+    store = build_store(args)
+    reference = QueryEngine(store.clone())      # same epoch, direct engine
+    autoscale = None
+    if args.autoscale:
+        autoscale = {"k": args.k, "target_eps": args.target_eps,
+                     "target_p99_ms": args.target_p99_ms}
+    tier = ServingTier.build(store, replicas=args.replicas,
+                             quota_qps=args.quota_qps,
+                             autoscale=autoscale,
+                             default_deadline=args.deadline)
+    tenants = [f"tenant{i}" for i in range(args.tenants)]
+    # Tenant 0 is deliberately starved so the shed path exercises under
+    # any load: 1 token, slow refill.
+    tier.set_quota(tenants[0], rate=0.5, burst=1)
+    print(f"[tier] {args.replicas} replicas × {len(store.batches)} batches, "
+          f"{args.tenants} tenants (quota {args.quota_qps} qps, "
+          f"{tenants[0]} pinned to 0.5 qps)"
+          + (", autoscale armed" if autoscale else ""))
+
+    n = store.graph.num_vertices
+    rng = np.random.default_rng(2)
+    queries = [rng.integers(0, n, 3).tolist() for _ in range(8)]
+    sheds, futs = [], []            # futs: (query, future) per admitted
+    for q in queries:
+        for t in tenants:
+            try:
+                futs.append((q, tier.submit_sigma(t, q)))
+            except ShedError as e:
+                sheds.append(e)
+    values = tier.gather([f for _, f in futs])
+    print(f"[tier] {len(futs)} admitted / {len(sheds)} shed; "
+          f"pending per replica {tier.group.pending()}")
+
+    if not args.smoke:
+        print(tier.to_json(indent=1))
+        tier.close()
+        return
+
+    # ---- sheds carry retry-after; in-quota tenants unaffected
+    assert sheds, "starved tenant must shed under this burst"
+    assert all(e.retry_after > 0 and e.tenant == tenants[0] for e in sheds)
+    # ---- in-quota answers ≡ direct single-engine QueryEngine, same epoch
+    for (q, _), val in zip(futs, values):
+        assert val == reference.sigma([q])[0], \
+            "tier answers must be bit-identical to the direct engine"
+    print(f"[smoke] {len(values)} in-quota answers bit-identical to direct "
+          f"QueryEngine; {len(sheds)} sheds with retry-after "
+          f"{sheds[0].retry_after:.2f}s")
+
+    # ---- mid-stream refresh: epoch guard refuses mixed replies
+    before = tier.submit_sigma(tenants[-1], queries[0])
+    before.result()
+    tier.group.replicas[0].frontend.refresh_now(0.5)    # half a sweep
+    after = tier.submit_sigma(tenants[-1], queries[1],
+                              deadline=0.0)
+    after.result()
+    mixed = False
+    try:
+        tier.gather([before, after])
+    except EpochMixError as e:
+        mixed = True
+        assert len(e.versions) == 2
+    assert mixed or before.pool_version == after.pool_version, \
+        "mixed-epoch replies must be refused"
+    # finish the sweep → replicas re-converge bit-identically
+    for r in tier.group.replicas[1:]:
+        r.frontend.refresh_now(0.5)
+    assert tier.group.consistent()
+    stacks = [np.asarray(r.store.visited_stack())
+              for r in tier.group.replicas]
+    assert all(np.array_equal(stacks[0], s) for s in stacks[1:])
+    print(f"[smoke] mid-stream refresh: mixed-epoch gather "
+          f"{'refused (EpochMixError)' if mixed else 'not provoked'}; "
+          f"replicas re-converged bit-identically at "
+          f"{tier.group.versions()[0]}")
+
+    # ---- autoscale: scale events swap epochs, never cold-rebuild
+    if tier.autoscaler is not None:
+        b0 = tier.group.num_batches
+        decision = tier.autoscaler.step()
+        assert tier.group.consistent()
+        print(f"[smoke] autoscale: {decision.action} {b0} → "
+              f"{tier.group.num_batches} batches "
+              f"(ε̂={decision.eps_bound}, θ={decision.theta}) — {decision.reason}")
+
+    snap = tier.snapshot()
+    assert snap["totals"]["shed"] == len(sheds)
+    assert snap["latency"]["all"]["count"] >= len(futs)
+    print(f"[smoke] metrics: shed_rate={snap['totals']['shed_rate']:.2f}, "
+          f"p99={snap['latency']['all']['p99'] * 1e3:.1f}ms over "
+          f"{snap['latency']['all']['count']} queries")
+    tier.close()
+    print(f"[smoke] PASS in {time.time() - t0:.1f}s")
+
+
 # -------------------------------------------------------------------- async
 def _async_demo(args, engine) -> None:
     """Deadline-batched front-end under a burst of threaded clients."""
@@ -361,6 +476,24 @@ def main():
     ap.add_argument("--async", dest="async_frontend", action="store_true",
                     help="front the batcher with the deadline-batched "
                          "AsyncFrontEnd and drive it from client threads")
+    ap.add_argument("--tier", action="store_true",
+                    help="serve through the production tier: per-tenant "
+                         "admission control + replica routing "
+                         "(+ --autoscale); see repro.serve.tier")
+    ap.add_argument("--tenants", type=int, default=3,
+                    help="tier tenant count (tenant0 is quota-starved in "
+                         "the smoke so the shed path exercises)")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="tier engine replicas over one epoch-tagged pool")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="arm the signal-driven pool autoscaler "
+                         "(coverage-error bound + query p99)")
+    ap.add_argument("--quota-qps", type=float, default=50.0,
+                    help="default per-tenant admission rate (tokens/s)")
+    ap.add_argument("--target-eps", type=float, default=0.35,
+                    help="autoscale coverage-error target (IMM ε)")
+    ap.add_argument("--target-p99-ms", type=float, default=250.0,
+                    help="autoscale query-latency target")
     ap.add_argument("--deadline", type=float, default=0.05,
                     help="async flush deadline in seconds")
     ap.add_argument("--refresh-every", type=float, default=None,
@@ -398,7 +531,15 @@ def main():
                     help="pool snapshot directory (default: temp dir)")
     args = ap.parse_args()
 
-    if args.mesh:
+    if args.tier:
+        if args.mesh:
+            raise SystemExit("--tier serves single-device replicas; mesh "
+                             "backends arrive with cross-process replicas")
+        if args.tenants < 2:
+            raise SystemExit("--tier wants --tenants >= 2 (tenant0 is the "
+                             "quota-starved one)")
+        run_tier(args)
+    elif args.mesh:
         shape = _parse_mesh(args.mesh)
         if args.smoke:
             _force_cpu_host_devices(shape[0] * shape[1])

@@ -111,6 +111,13 @@ class AsyncFrontEnd:
                         deadline: float | None = None) -> concurrent.futures.Future:
         return self._submit(self.batcher.submit_marginal, exclude, deadline)
 
+    @property
+    def inflight(self) -> int:
+        """Submitted-but-unresolved queries (queued + on device) — the
+        load signal a replica router balances on."""
+        with self._cv:
+            return len(self._futures)
+
     # --------------------------------------------------------- dispatcher
     def _wait_for_trigger(self) -> str | None:
         """Block until a flush should fire; returns the trigger kind, or
@@ -137,6 +144,10 @@ class AsyncFrontEnd:
             start = time.monotonic()
             try:
                 with self._dispatch_lock:
+                    # Refreshes serialize on the dispatch lock, so this read
+                    # equals the version ``flush`` snapshots internally —
+                    # the epoch tag every resolved future is stamped with.
+                    version = self.batcher.engine.store.version
                     results = self.batcher.flush()
                 failed, error = (), None
             except batcher_lib.FlushError as e:  # fail futures, not the thread
@@ -171,9 +182,38 @@ class AsyncFrontEnd:
                 if err is not None:
                     fut.set_exception(err)
                 else:
+                    # Epoch tag: the pool version this answer was computed
+                    # under (the serving tier's replica router refuses to
+                    # mix replies across versions).  Set before set_result
+                    # so done-callbacks and result() waiters always see it.
+                    fut.pool_version = version
                     fut.set_result(value)
 
-    # ------------------------------------------------- background refresh
+    # --------------------------------------------- store mutations/refresh
+    def mutate_store(self, fn):
+        """Run ``fn(store)`` atomically wrt dispatch and return its result.
+
+        The mutation (refresh, tier autoscale grow/shrink, ...) holds the
+        same lock every flush holds, so a version bump + stack swap can
+        never land under an in-flight dispatch — each flush sees one
+        consistent (stack, version) pair, and every replica-wide mutation
+        the serving tier applies is an atomic epoch swap on this replica.
+        """
+        with self._dispatch_lock:
+            result = fn(self.batcher.engine.store)
+        with self._cv:
+            self._cv.notify_all()
+        return result
+
+    def refresh_now(self, fraction: float | None = None) -> list[int]:
+        """One epoch refresh, serialized with dispatch; returns the
+        resampled slots."""
+        frac = self.refresh_fraction if fraction is None else fraction
+        slots = self.mutate_store(lambda store: store.refresh(frac))
+        with self._cv:
+            self.stats.refreshes += 1
+        return slots
+
     def _refresh_loop(self) -> None:
         while not self._stop_event.wait(self.refresh_every):
             with self._dispatch_lock:
@@ -188,7 +228,17 @@ class AsyncFrontEnd:
 
     # -------------------------------------------------------------- close
     def close(self, timeout: float | None = None) -> None:
-        """Stop accepting submits, drain pending queries, join workers."""
+        """Stop accepting submits, drain, join workers, resolve stragglers.
+
+        Drain contract: **no submitted future is ever left unresolved.**
+        The dispatcher's final iterations flush everything still pending
+        (the ``drain`` trigger), delivering answers or — if a drain
+        dispatch breaks — failing exactly the consumed tickets with the
+        `FlushError`.  If any future somehow remains after the workers are
+        joined (dispatcher died on an unexpected error, or ``timeout``
+        expired mid-drain), it is failed here with a `FlushError` rather
+        than hanging its caller forever.  Idempotent.
+        """
         with self._cv:
             self._closed = True
             self._cv.notify_all()
@@ -196,6 +246,18 @@ class AsyncFrontEnd:
         self._dispatcher.join(timeout)
         if self._refresher is not None:
             self._refresher.join(timeout)
+        with self._cv:
+            leftovers = list(self._futures.items())
+            self._futures.clear()
+            self._submit_times.clear()
+        if leftovers:
+            error = batcher_lib.FlushError(
+                [t for t, _ in leftovers], {},
+                RuntimeError("AsyncFrontEnd closed before the dispatcher "
+                             "drained these tickets"))
+            for _, fut in leftovers:
+                if fut.set_running_or_notify_cancel():
+                    fut.set_exception(error)
 
     def __enter__(self) -> "AsyncFrontEnd":
         return self

@@ -140,6 +140,19 @@ class ShardedSketchStore(SketchStore):
         # already; other backends run per batch on the default device.
         return [_host_batch(b) for b in super()._sample_block(batch_indices)]
 
+    def _clone_empty(self) -> "ShardedSketchStore":
+        return type(self)(self.graph, self.config, self.mesh, axis=self.axis,
+                          g_rev=self.g_rev)
+
+    def _extend_stack(self, new_batches) -> None:
+        # Growth can change ``padded_batches`` and every shard's block
+        # boundaries — drop the cache and let ``visited_stack`` reassemble
+        # from the host-staged batches (placement only; no resampling).
+        self._stack = None
+
+    def _truncate_stack(self, keep: int) -> None:
+        self._stack = None
+
     # -------------------------------------------------------------- stack
     def visited_stack(self) -> jnp.ndarray:
         """(Bp, V, W) stack, zero-padded to ``padded_batches`` and sharded

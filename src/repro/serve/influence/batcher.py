@@ -11,8 +11,9 @@ allocation, the pending list, the dispatch counter, and every result-cache
 access are guarded by one internal lock.  ``flush()`` swaps the pending
 list out under the lock and runs the device dispatches *outside* it, so
 callers keep submitting (into the next batch) while a flush is on device.
-A shared ``ResultCache`` must only be reached through its owning batcher —
-the cache itself is not locked.
+The ``ResultCache`` carries its own lock and an atomic ``stats()``
+snapshot, so observers (e.g. the serving tier's metrics exporter) may read
+it concurrently; *writes* still route through the owning batcher.
 
 **Deadlines.**  ``submit_*(..., deadline=s)`` tags the request "dispatch
 within ``s`` seconds"; the batcher never flushes by itself, but exposes

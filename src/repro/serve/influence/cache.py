@@ -5,9 +5,18 @@ were computed against; a lookup under any other version is a miss and
 evicts the stale entry, so a pool refresh invalidates the whole working set
 without a scan.  Keys are canonicalized seed-set tuples, making the cache
 insensitive to caller-side ordering/duplication of seeds.
+
+**Thread safety.**  Mutations (``get``/``put``/``clear``) are guarded by an
+internal lock, and ``stats()`` returns one *atomic* snapshot of the
+counters — hits, misses, size, and hit rate all read under the same lock
+acquisition, so observers (the serving tier's ``metrics`` exporter, which
+polls caches from outside their owning batcher) never see a torn view such
+as a hit count from one flush paired with a miss count from the next.  The
+bare ``hits``/``misses`` attributes remain for single-threaded callers.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Any, Hashable
 
@@ -23,32 +32,45 @@ class ResultCache:
     def __init__(self, capacity: int = 4096):
         self.capacity = capacity
         self._entries: OrderedDict[tuple, tuple[Hashable, Any]] = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
     def get(self, version: Hashable, kind: str, key: Hashable):
         """Value if present AND computed under ``version``; else None."""
-        entry = self._entries.get((kind, key))
-        if entry is None:
-            self.misses += 1
-            return None
-        ver, value = entry
-        if ver != version:
-            del self._entries[(kind, key)]          # stale epoch
-            self.misses += 1
-            return None
-        self._entries.move_to_end((kind, key))
-        self.hits += 1
-        return value
+        with self._lock:
+            entry = self._entries.get((kind, key))
+            if entry is None:
+                self.misses += 1
+                return None
+            ver, value = entry
+            if ver != version:
+                del self._entries[(kind, key)]          # stale epoch
+                self.misses += 1
+                return None
+            self._entries.move_to_end((kind, key))
+            self.hits += 1
+            return value
 
     def put(self, version: Hashable, kind: str, key: Hashable, value) -> None:
-        self._entries[(kind, key)] = (version, value)
-        self._entries.move_to_end((kind, key))
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+        with self._lock:
+            self._entries[(kind, key)] = (version, value)
+            self._entries.move_to_end((kind, key))
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+
+    def stats(self) -> dict:
+        """Atomic counter snapshot: {hits, misses, size, hit_rate}."""
+        with self._lock:
+            hits, misses, size = self.hits, self.misses, len(self._entries)
+        total = hits + misses
+        return {"hits": hits, "misses": misses, "size": size,
+                "hit_rate": (hits / total) if total else 0.0}
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def clear(self) -> None:
-        self._entries.clear()
+        with self._lock:
+            self._entries.clear()

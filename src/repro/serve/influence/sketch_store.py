@@ -178,11 +178,67 @@ class SketchStore:
         want = min(num_batches, self.capacity)
         missing = want - len(self.batches)
         if missing > 0:
-            for b in self._sample_block(self._take_indices(missing)):
+            new = self._sample_block(self._take_indices(missing))
+            for b in new:
                 self.batches.append(b)
                 self.batch_epochs.append(self.epoch)
-            self._stack = None
+            self._extend_stack(new)
         return self.batches
+
+    def shrink(self, num_batches: int) -> list[int]:
+        """Drop the highest slots down to ``num_batches`` (floor 1); returns
+        the dropped slots.  The slot *prefix* is kept, so offline IMM's
+        first-⌈θ/colors⌉-slots selection stays meaningful and replicas that
+        apply the same shrink stay bit-identical.  The cached stack is
+        sliced in place (no resample, no host re-staging); ``version``
+        changes via the batch count, invalidating result caches.
+        """
+        keep = max(1, min(int(num_batches), len(self.batches)))
+        dropped = list(range(keep, len(self.batches)))
+        if not dropped:
+            return dropped
+        self.batches = self.batches[:keep]
+        self.batch_epochs = self.batch_epochs[:keep]
+        self._truncate_stack(keep)
+        return dropped
+
+    def clone(self) -> "SketchStore":
+        """A replica pool sharing this store's (immutable) batches.
+
+        The clone has its own sampler, stack cache, and counters, so later
+        ``ensure``/``refresh``/``shrink`` on either store are independent —
+        but because slot ``i`` is a pure function of ``(graph, master_seed,
+        batch_index)`` and both stores continue from the same
+        ``next_batch_index``, applying the *same* mutation sequence to every
+        clone keeps them bit-identical (the serving tier's replica-group
+        invariant).  No resampling: batch masks are shared references
+        (RRR batches are never mutated in place).
+        """
+        c = self._clone_empty()
+        c.epoch = self.epoch
+        c.next_batch_index = self.next_batch_index
+        c.batches = list(self.batches)
+        c.batch_epochs = list(self.batch_epochs)
+        return c
+
+    def _clone_empty(self) -> "SketchStore":
+        """Subclass hook: a fresh store with this store's graph + config
+        (the sharded subclass threads its mesh through)."""
+        return type(self)(self.graph, self.config, g_rev=self.g_rev)
+
+    def _extend_stack(self, new_batches: list[rrr.RRRBatch]) -> None:
+        """Append newly-sampled slots to the cached stack without
+        re-staging the existing allocation (a tier scale-up event must not
+        cold-rebuild the pool).  No-op while the stack is unbuilt."""
+        if self._stack is None:
+            return
+        masks = jnp.stack([jnp.asarray(b.visited) for b in new_batches])
+        self._stack = jnp.concatenate([self._stack, masks])
+
+    def _truncate_stack(self, keep: int) -> None:
+        """Slice the cached stack to the kept slot prefix (device-side)."""
+        if self._stack is not None:
+            self._stack = self._stack[:keep]
 
     def visited_stack(self) -> jnp.ndarray:
         """(B, V, W) stacked masks for the query engine (cached per version)."""

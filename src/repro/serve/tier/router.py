@@ -1,0 +1,213 @@
+"""Replica routing: fan read traffic over N engines serving ONE pool.
+
+A `Replica` bundles a sketch store, a query engine, a `MicroBatcher` (+
+its epoch-keyed cache) and a deadline-batched `AsyncFrontEnd`.  A
+`ReplicaGroup` holds N of them built from **clones of the same pool**
+(`SketchStore.clone` — shared immutable batches, zero resampling) and
+routes each submit to one replica:
+
+* **least_pending** (default) — the replica with the fewest unresolved
+  queries, so a slow flush on one replica never queues the others;
+* **round_robin** — strict rotation, useful for benchmarking.
+
+**Epoch consistency.**  Every answer is stamped with the pool ``version``
+of the flush that computed it (`AsyncFrontEnd` sets ``fut.pool_version``
+inside the dispatch lock).  `gather()` is the guard: it refuses to hand
+back a set of replies spanning more than one pool version
+(`EpochMixError`), so a caller composing multi-query results (a σ
+comparison, a marginal-gain sweep) can never silently mix estimates from
+different sample populations.
+
+**Replica refresh.**  `refresh()` sweeps the replicas one at a time, each
+swap atomic per replica (`AsyncFrontEnd.mutate_store` — the same lock
+every flush holds).  Because each clone continues the same
+``next_batch_index`` trajectory from the same master seed, the same
+refresh applied to every replica resamples the same slots with the same
+RNG streams: after the sweep all replicas are **bit-identical again at
+the new epoch**.  Mid-sweep, replicas disagree only on version — which
+`gather()` turns into a retriable error instead of a wrong answer.
+`start_refresh(every)` runs the sweep on a background thread.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+
+from repro.serve.distributed.frontend import AsyncFrontEnd
+from repro.serve.influence import MicroBatcher, ResultCache
+from repro.serve.influence.engine import QueryEngine
+
+
+class EpochMixError(RuntimeError):
+    """A reply set spans more than one pool version; retry the request.
+
+    Raised by `ReplicaGroup.gather` instead of returning estimates drawn
+    from different sample populations.  ``versions`` lists the distinct
+    pool versions observed.
+    """
+
+    def __init__(self, versions):
+        super().__init__(f"replies span pool versions {sorted(versions)} — "
+                         "a refresh landed mid-request; retry")
+        self.versions = tuple(sorted(versions))
+
+
+class Replica:
+    """One engine replica: store + engine + batcher + async front-end."""
+
+    def __init__(self, index: int, store, engine, frontend: AsyncFrontEnd):
+        self.index = index
+        self.store = store
+        self.engine = engine
+        self.frontend = frontend
+
+    @classmethod
+    def build(cls, index: int, store, *, engine_factory=QueryEngine,
+              cache_capacity: int = 4096, **frontend_kw) -> "Replica":
+        engine = engine_factory(store)
+        batcher = MicroBatcher(engine, cache=ResultCache(cache_capacity))
+        return cls(index, store, engine,
+                   AsyncFrontEnd(batcher, **frontend_kw))
+
+    @property
+    def pending(self) -> int:
+        return self.frontend.inflight
+
+    @property
+    def version(self):
+        return self.store.version
+
+    def close(self, timeout: float | None = None) -> None:
+        self.frontend.close(timeout)
+
+
+class ReplicaGroup:
+    """N replicas of one epoch-tagged pool behind a pick policy."""
+
+    POLICIES = ("least_pending", "round_robin")
+
+    def __init__(self, replicas: list[Replica], *,
+                 policy: str = "least_pending", metrics=None):
+        if not replicas:
+            raise ValueError("ReplicaGroup needs at least one replica")
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"pick one of {self.POLICIES}")
+        self.replicas = list(replicas)
+        self.policy = policy
+        self._metrics = metrics
+        self._rr = itertools.count()
+        self._refresher: threading.Thread | None = None
+        self._stop = threading.Event()
+
+    @classmethod
+    def build(cls, store, num_replicas: int, *, engine_factory=QueryEngine,
+              policy: str = "least_pending", metrics=None,
+              **frontend_kw) -> "ReplicaGroup":
+        """Replicate ``store`` (clone — no resampling) behind a group."""
+        replicas = [
+            Replica.build(i, store if i == 0 else store.clone(),
+                          engine_factory=engine_factory, **frontend_kw)
+            for i in range(num_replicas)]
+        return cls(replicas, policy=policy, metrics=metrics)
+
+    # --------------------------------------------------------------- pick
+    def pick(self) -> Replica:
+        if self.policy == "round_robin" or len(self.replicas) == 1:
+            return self.replicas[next(self._rr) % len(self.replicas)]
+        return min(self.replicas, key=lambda r: (r.pending, r.index))
+
+    def _submit(self, kind: str, payload, deadline):
+        r = self.pick()
+        fut = getattr(r.frontend, f"submit_{kind}")(payload,
+                                                    deadline=deadline)
+        fut.replica_index = r.index
+        if self._metrics is not None:
+            self._metrics.counter(f"router.replica{r.index}.dispatched").add()
+        return fut
+
+    def submit_top_k(self, k: int, *, deadline: float | None = None):
+        return self._submit("top_k", k, deadline)
+
+    def submit_sigma(self, seed_set, *, deadline: float | None = None):
+        return self._submit("sigma", seed_set, deadline)
+
+    def submit_marginal(self, exclude, *, deadline: float | None = None):
+        return self._submit("marginal", exclude, deadline)
+
+    # ------------------------------------------------------------- gather
+    @staticmethod
+    def gather(futures, timeout: float | None = None) -> list:
+        """Results of ``futures``, refusing mixed-epoch reply sets.
+
+        Waits for every future, re-raises the first failure, and checks all
+        replies carry the SAME pool version — else `EpochMixError` (the
+        caller retries; by then the refresh sweep has converged).  Single
+        replies can't mix and pass trivially.
+        """
+        values = [f.result(timeout) for f in futures]
+        versions = {f.pool_version for f in futures}
+        if len(versions) > 1:
+            raise EpochMixError(versions)
+        return values
+
+    # ------------------------------------------------- epoch-swap refresh
+    def refresh(self, fraction: float = 0.25) -> list[int]:
+        """Refresh every replica (atomic per replica, identical streams);
+        returns the resampled slots (same on every replica)."""
+        slots: list[int] = []
+        for r in self.replicas:
+            slots = r.frontend.refresh_now(fraction)
+        return slots
+
+    def scale_to(self, num_batches: int) -> None:
+        """Grow/shrink every replica's pool to ``num_batches`` slots, each
+        swap atomic per replica.  Same mutation + same stream trajectory ⇒
+        replicas stay bit-identical at the new size."""
+        for r in self.replicas:
+            r.frontend.mutate_store(
+                lambda store: (store.ensure(num_batches),
+                               store.shrink(num_batches)))
+
+    def start_refresh(self, every: float, fraction: float = 0.25) -> None:
+        """Background replica-refresh sweep every ``every`` seconds."""
+        if self._refresher is not None:
+            raise RuntimeError("refresh thread already running")
+
+        def loop():
+            while not self._stop.wait(every):
+                self.refresh(fraction)
+
+        self._refresher = threading.Thread(target=loop, daemon=True,
+                                           name="tier-refresh")
+        self._refresher.start()
+
+    # ---------------------------------------------------------- lifecycle
+    @property
+    def num_batches(self) -> int:
+        return len(self.replicas[0].store.batches)
+
+    def versions(self) -> list:
+        return [r.version for r in self.replicas]
+
+    def consistent(self) -> bool:
+        """True when every replica serves the same pool version."""
+        return len(set(self.versions())) == 1
+
+    def pending(self) -> list[int]:
+        return [r.pending for r in self.replicas]
+
+    def close(self, timeout: float | None = None) -> None:
+        self._stop.set()
+        if self._refresher is not None:
+            self._refresher.join(timeout)
+            self._refresher = None
+        for r in self.replicas:
+            r.close(timeout)
+
+    def __enter__(self) -> "ReplicaGroup":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -193,6 +193,129 @@ def test_frontend_flush_error_fails_only_consumed_callers(engine):
         assert good.result(timeout=30) == engine.sigma([[2]])[0]
 
 
+class _IntermittentEngine:
+    """Wraps a real engine; every ``period``-th σ dispatch raises."""
+    def __init__(self, inner, period=3):
+        self.inner = inner
+        self.query_slots = inner.query_slots
+        self.max_seeds = inner.max_seeds
+        self.period = period
+        self.calls = 0
+
+    @property
+    def store(self):
+        return self.inner.store
+
+    def top_k(self, k):
+        return self.inner.top_k(k)
+
+    def sigma(self, seed_sets):
+        self.calls += 1
+        if self.calls % self.period == 0:
+            raise RuntimeError("intermittent boom")
+        return self.inner.sigma(seed_sets)
+
+
+def test_batcher_stress_every_ticket_resolves_exactly_once(engine):
+    """Many submitter threads racing flush() against intermittent dispatch
+    failures: every ticket must end up answered exactly once OR named in
+    exactly one FlushError.tickets — never both, never neither."""
+    from repro.serve.influence import FlushError
+    b = MicroBatcher(_IntermittentEngine(engine, period=3))
+    submitted, answered, failed = set(), {}, []
+    lock = threading.Lock()
+
+    def submitter(base):
+        for j in range(6):
+            t = b.submit_sigma([base, base + j + 1])
+            with lock:
+                submitted.add(t)
+            time.sleep(0.001)
+
+    def flusher():
+        for _ in range(20):
+            try:
+                out = b.flush()
+            except FlushError as e:
+                with lock:
+                    failed.extend(e.tickets)
+                    answered.update(e.partial)
+            else:
+                with lock:
+                    answered.update(out)
+            time.sleep(0.002)
+
+    threads = ([threading.Thread(target=submitter, args=(i,))
+                for i in range(6)]
+               + [threading.Thread(target=flusher) for _ in range(2)])
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    while b.pending_count:                    # drain stragglers
+        try:
+            answered.update(b.flush())
+        except FlushError as e:
+            failed.extend(e.tickets)
+            answered.update(e.partial)
+    assert set(answered) | set(failed) == submitted
+    assert not set(answered) & set(failed), \
+        "a ticket must not be both answered and failed"
+    assert len(failed) == len(set(failed)), \
+        "a ticket must appear in at most one FlushError"
+    assert failed, "period=3 over 20+ flushes must have tripped at least once"
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_frontend_close_fails_undrained_futures_instead_of_hanging(engine):
+    """If the dispatcher dies on an unexpected (non-FlushError) exception,
+    close() must fail the stranded futures with a clear FlushError rather
+    than leaving callers blocked forever."""
+    from repro.serve.influence import FlushError
+    fe = AsyncFrontEnd(MicroBatcher(engine), default_deadline=30.0)
+    fut = fe.submit_sigma([3])
+    fe.batcher.flush = lambda: (_ for _ in ()).throw(RuntimeError("dead"))
+    with fe._cv:
+        fe._cv.notify_all()                   # nothing pending past deadline,
+    fe.close()                                # so the dispatcher dies in drain
+    with pytest.raises(FlushError) as ei:
+        fut.result(timeout=5)
+    assert "drained" in str(ei.value.__cause__)
+    assert len(ei.value.tickets) == 1
+
+
+def test_frontend_close_drain_failure_resolves_every_future(engine):
+    """A flaky dispatch during the close() drain still resolves every
+    submitted future — answers or FlushError, nothing left pending."""
+    from repro.serve.influence import FlushError
+    fe = AsyncFrontEnd(MicroBatcher(_FlakyEngine(engine)),
+                       default_deadline=30.0)
+    futs = [fe.submit_sigma([i]) for i in range(3)]
+    fe.close()
+    assert all(f.done() for f in futs), "close() must leave nothing pending"
+    outcomes = []
+    for f in futs:
+        try:
+            outcomes.append(f.result(timeout=5))
+        except FlushError:
+            outcomes.append("failed")
+    assert "failed" in outcomes, "the flaky first dispatch must surface"
+
+
+def test_result_cache_stats_snapshot(engine):
+    cache = ResultCache()
+    b = MicroBatcher(engine, cache=cache)
+    b.submit_sigma([1, 2]), b.flush()
+    b.submit_sigma([1, 2]), b.flush()          # same epoch ⇒ hit
+    stats = cache.stats()
+    assert stats["hits"] == 1 and stats["misses"] >= 1
+    assert stats["size"] == len(cache)
+    assert stats["hit_rate"] == pytest.approx(
+        stats["hits"] / (stats["hits"] + stats["misses"]))
+    assert set(stats) == {"hits", "misses", "size", "hit_rate"}
+
+
 # ------------------------------------------------------ batcher deadlines
 def test_batcher_deadline_bookkeeping(engine):
     b = MicroBatcher(engine)

@@ -1,0 +1,321 @@
+"""Production serving tier: token-bucket admission, replica routing with
+epoch-consistency, signal-driven autoscaling, metrics, and the end-to-end
+acceptance path (sheds + bit-identity vs a direct engine + mid-stream
+refresh guard)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import imm
+from repro.graph import generators
+from repro.serve.influence import PoolConfig, QueryEngine, SketchStore
+from repro.serve.tier import (AdmissionController, AutoScaler, EpochMixError,
+                              Histogram, MetricSet, ReplicaGroup, ServingTier,
+                              ShedError)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generators.powerlaw_cluster(180, 5.0, prob=0.25, seed=23)
+
+
+def make_store(graph, batches=4, max_batches=16):
+    s = SketchStore(graph, PoolConfig(num_colors=64, max_batches=max_batches,
+                                      master_seed=11))
+    s.ensure(batches)
+    return s
+
+
+# ------------------------------------------------------------- admission
+class FakeClock:
+    def __init__(self):
+        self.t = 1000.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_quota_burst_then_shed_with_honest_retry_after():
+    clock = FakeClock()
+    adm = AdmissionController(rate=2.0, burst=3, clock=clock)
+    for _ in range(3):                        # full burst admits
+        adm.admit("t")
+    with pytest.raises(ShedError) as ei:
+        adm.admit("t")
+    # empty bucket, rate 2/s, cost 1 ⇒ retry in 0.5s exactly
+    assert ei.value.retry_after == pytest.approx(0.5)
+    assert ei.value.tenant == "t"
+    # shed must not take partial tokens: waiting retry_after then succeeds
+    clock.t += ei.value.retry_after
+    adm.admit("t")
+
+
+def test_quota_refill_caps_at_burst():
+    clock = FakeClock()
+    adm = AdmissionController(rate=10.0, burst=2, clock=clock)
+    adm.admit("t"), adm.admit("t")
+    clock.t += 3600                           # idle an hour: still only burst
+    adm.admit("t"), adm.admit("t")
+    with pytest.raises(ShedError):
+        adm.admit("t")
+
+
+def test_quota_per_tenant_isolation_and_unmetered():
+    clock = FakeClock()
+    adm = AdmissionController(rate=1.0, burst=1, clock=clock)
+    adm.set_quota("vip", rate=None)           # unmetered override
+    adm.admit("a")
+    with pytest.raises(ShedError):
+        adm.admit("a")                        # a is dry...
+    adm.admit("b")                            # ...b's bucket is untouched
+    for _ in range(100):
+        adm.admit("vip")                      # unmetered never sheds
+    assert adm.quota("vip") is None
+    assert adm.quota("a") == (1.0, 1.0)
+
+
+def test_quota_counts_into_metrics():
+    clock, m = FakeClock(), MetricSet()
+    adm = AdmissionController(rate=1.0, burst=1, clock=clock, metrics=m)
+    adm.admit("t")
+    with pytest.raises(ShedError):
+        adm.admit("t")
+    snap = m.snapshot()
+    assert snap["tenant"]["t"] == {"admitted": 1, "shed": 1}
+
+
+# --------------------------------------------------------------- metrics
+def test_histogram_quantiles_from_bucket_cdf():
+    h = Histogram(bounds=[0.001, 0.01, 0.1, 1.0])
+    for v in [0.0005] * 50 + [0.05] * 49 + [5.0]:
+        h.record(v)
+    assert h.quantile(0.50) == pytest.approx(0.001)   # bucket upper bound
+    assert h.quantile(0.99) == pytest.approx(0.1)
+    assert h.quantile(0.999) == pytest.approx(5.0)    # overflow → observed max
+    snap = h.snapshot()
+    assert snap["count"] == 100 and snap["max"] == pytest.approx(5.0)
+    assert set(snap) == {"count", "mean", "max", "p50", "p99", "p999"}
+
+
+def test_histogram_empty_and_threaded_counter():
+    assert Histogram().quantile(0.99) == 0.0
+    m = MetricSet()
+    c = m.counter("x.y")
+
+    def hammer():
+        for _ in range(1000):
+            c.add()
+
+    threads = [threading.Thread(target=hammer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert m.snapshot()["x"]["y"] == 8000
+    assert m.counter("x.y") is c              # created once, stable identity
+
+
+# ------------------------------------------------------- imm bound inverse
+def test_eps_bound_inverts_estimate_theta():
+    """eps_bound_for_theta is the exact inverse of the λ*/LB bound driving
+    estimate_theta: feeding the θ that a given ε demands must return ε."""
+    n, k, eps = 2000, 8, 0.3
+    lam = imm._lam_star_coeff(n, k, imm._adjusted_ell(n, 1.0)) / eps ** 2
+    theta = int(np.ceil(lam / 1.0))           # opt_lb = 1
+    got = imm.eps_bound_for_theta(n, k, theta)
+    assert got == pytest.approx(eps, rel=0.02)
+    # monotone: more samples / bigger OPT ⇒ tighter bound
+    assert imm.eps_bound_for_theta(n, k, 4 * theta) == pytest.approx(
+        eps / 2, rel=0.02)
+    assert imm.eps_bound_for_theta(n, k, theta, opt_lb=4.0) < got
+
+
+# ----------------------------------------------------------- clone/shrink
+def test_store_clone_shares_pool_bit_identically(graph):
+    store = make_store(graph)
+    twin = store.clone()
+    np.testing.assert_array_equal(np.asarray(store.visited_stack()),
+                                  np.asarray(twin.visited_stack()))
+    assert twin.version == store.version
+    # identical mutation sequences keep the twins converged
+    store.refresh(0.5), twin.refresh(0.5)
+    np.testing.assert_array_equal(np.asarray(store.visited_stack()),
+                                  np.asarray(twin.visited_stack()))
+    assert twin.version == store.version
+
+
+def test_store_shrink_keeps_slot_prefix(graph):
+    store = make_store(graph)
+    before = np.asarray(store.visited_stack())
+    dropped = store.shrink(2)
+    assert dropped == [2, 3] and len(store.batches) == 2
+    np.testing.assert_array_equal(np.asarray(store.visited_stack()),
+                                  before[:2])
+    store.ensure(4)                           # regrow extends, same prefix
+    np.testing.assert_array_equal(
+        np.asarray(store.visited_stack())[:2], before[:2])
+
+
+# ----------------------------------------------------------------- router
+def _fake_future(value, version):
+    import concurrent.futures
+    f = concurrent.futures.Future()
+    f.pool_version = version
+    f.set_result(value)
+    return f
+
+
+def test_gather_refuses_mixed_epochs():
+    ok = ReplicaGroup.gather([_fake_future(1.0, (0, 4)),
+                              _fake_future(2.0, (0, 4))])
+    assert ok == [1.0, 2.0]
+    with pytest.raises(EpochMixError) as ei:
+        ReplicaGroup.gather([_fake_future(1.0, (0, 4)),
+                             _fake_future(2.0, (1, 4))])
+    assert ei.value.versions == ((0, 4), (1, 4))
+
+
+def test_replica_group_policies_and_refresh_convergence(graph):
+    store = make_store(graph)
+    with ReplicaGroup.build(store, 3, policy="round_robin",
+                            default_deadline=0.02) as group:
+        assert [group.pick().index for _ in range(4)] == [0, 1, 2, 0]
+        assert group.consistent()
+        # one refresh sweep: replicas re-converge bit-identically at the
+        # new epoch
+        group.refresh(0.5)
+        assert group.consistent()
+        stacks = [np.asarray(r.store.visited_stack())
+                  for r in group.replicas]
+        for s in stacks[1:]:
+            np.testing.assert_array_equal(stacks[0], s)
+        # answers after the sweep match a fresh direct engine on replica 0
+        fut = group.submit_sigma([1, 5, 9])
+        want = QueryEngine(group.replicas[0].store).sigma([[1, 5, 9]])[0]
+        assert group.gather([fut]) == [want]
+    with pytest.raises(ValueError):
+        ReplicaGroup.build(store, 1, policy="fastest")
+
+
+def test_replica_group_scale_to_keeps_replicas_identical(graph):
+    with ReplicaGroup.build(make_store(graph), 2,
+                            default_deadline=0.02) as group:
+        group.scale_to(7)
+        assert group.num_batches == 7 and group.consistent()
+        group.scale_to(3)
+        assert group.num_batches == 3 and group.consistent()
+        a, b = (np.asarray(r.store.visited_stack()) for r in group.replicas)
+        np.testing.assert_array_equal(a, b)
+
+
+# -------------------------------------------------------------- autoscaler
+def test_autoscaler_grows_to_meet_eps_then_holds(graph):
+    with ReplicaGroup.build(make_store(graph, batches=2), 2,
+                            default_deadline=0.0) as group:
+        scaler = AutoScaler(group, k=4, target_eps=0.4)
+        d1 = scaler.step()
+        assert d1.action == "grow" and d1.batches_after > d1.batches_before
+        assert scaler.eps_bound() <= 0.4 + 1e-9
+        assert group.consistent()
+        d2 = scaler.step()
+        assert d2.action == "hold"
+
+
+def test_autoscaler_shrinks_on_slow_p99_with_eps_headroom(graph):
+    hist = Histogram()
+    for _ in range(200):
+        hist.record(1.0)                      # fake p99 ≈ 1s, way over target
+    with ReplicaGroup.build(make_store(graph, batches=6), 1,
+                            default_deadline=0.0) as group:
+        scaler = AutoScaler(group, k=4, target_eps=10.0,  # huge ⇒ headroom
+                            target_p99_ms=50.0, latency_hist=hist)
+        d = scaler.step()
+        assert d.action == "shrink"
+        assert d.batches_after == d.batches_before - 1
+        assert group.num_batches == 5
+
+
+def test_autoscaler_respects_max_batches(graph):
+    with ReplicaGroup.build(make_store(graph, batches=2), 1,
+                            default_deadline=0.0) as group:
+        scaler = AutoScaler(group, k=4, target_eps=0.01, max_batches=3)
+        d = scaler.step()
+        assert d.batches_after == 3           # clamped, not the eps target
+        d2 = scaler.step()
+        assert d2.action == "hold" and "max_batches" in d2.reason
+
+
+# ----------------------------------------------------------- end-to-end
+def test_tier_end_to_end_sheds_and_serves_bit_identically(graph):
+    """The acceptance path: 2 replicas, an over-quota tenant sheds with
+    retry-after while in-quota tenants' answers are bit-identical to a
+    direct single-engine QueryEngine over the same pool epoch."""
+    store = make_store(graph)
+    reference = QueryEngine(store.clone())
+    with ServingTier.build(store, replicas=2, quota_qps=None,
+                           default_deadline=0.01) as tier:
+        tier.set_quota("starved", rate=0.1, burst=2)
+        queries = [[i, i + 3, i + 11] for i in range(8)]
+        futs, sheds = [], []
+        for q in queries:
+            futs.append((q, tier.submit_sigma("paid", q)))
+        for q in queries:
+            try:
+                futs.append((q, tier.submit_sigma("starved", q)))
+            except ShedError as e:
+                sheds.append(e)
+        assert sheds, "0.1 qps tenant must shed most of an 8-query burst"
+        assert all(s.retry_after > 0 and s.tenant == "starved"
+                   for s in sheds)
+        values = tier.gather([f for _, f in futs])
+        for (q, _), val in zip(futs, values):
+            assert val == reference.sigma([q])[0], \
+                "tier answer must be bit-identical to the direct engine"
+        snap = tier.snapshot()
+        assert snap["totals"]["shed"] == len(sheds)
+        assert snap["totals"]["admitted"] == len(futs)
+        assert 0 < snap["totals"]["shed_rate"] < 1
+        assert snap["latency"]["all"]["count"] >= len(futs)
+        assert snap["consistent"]
+        assert sum(r["dispatches"] for r in snap["replicas"]) >= 1
+
+
+def test_tier_mid_stream_refresh_never_mixes_epochs(graph):
+    """A refresh landing between two gathered queries must surface as
+    EpochMixError (or not land between them at all) — never as a silently
+    mixed-population answer."""
+    store = make_store(graph)
+    with ServingTier.build(store, replicas=2, quota_qps=None, policy="round_robin",
+                           default_deadline=0.01) as tier:
+        before = tier.submit_sigma("a", [1, 2, 3])
+        before.result(timeout=60)
+        # refresh ONE replica: the group is now epoch-split on purpose
+        tier.group.replicas[0].frontend.refresh_now(0.5)
+        assert not tier.group.consistent()
+        after = tier.submit_sigma("a", [4, 5, 6])
+        after.result(timeout=60)
+        if before.pool_version != after.pool_version:
+            with pytest.raises(EpochMixError):
+                tier.gather([before, after])
+        # finish the sweep: the group re-converges and gathers pass again
+        for r in tier.group.replicas[1:]:
+            r.frontend.refresh_now(0.5)
+        assert tier.group.consistent()
+        f1 = tier.submit_sigma("a", [1, 2, 3])
+        f2 = tier.submit_sigma("a", [4, 5, 6])
+        assert len(tier.gather([f1, f2])) == 2
+
+
+def test_tier_autoscale_step_keeps_group_consistent(graph):
+    store = make_store(graph, batches=2)
+    with ServingTier.build(store, replicas=2, quota_qps=None,
+                           autoscale={"k": 4, "target_eps": 0.45},
+                           default_deadline=0.0) as tier:
+        d = tier.autoscaler.step()
+        assert d.action == "grow" and tier.group.consistent()
+        a, b = (np.asarray(r.store.visited_stack())
+                for r in tier.group.replicas)
+        np.testing.assert_array_equal(a, b)
+        assert tier.snapshot()["autoscale_last"]["action"] == "grow"
