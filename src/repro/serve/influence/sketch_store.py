@@ -17,8 +17,10 @@ data-parallel and graph-parallel pool builds.  (The deprecated untyped
 
 Freshness is tracked per batch with an **epoch** tag: ``refresh()`` bumps
 the store epoch and resamples the oldest batches with brand-new batch
-indices (hence new RNG streams — never a repeat of a retired sample).  Any
-mutation changes ``version``, which keys the result cache.
+indices (hence new RNG streams — never a repeat of a retired sample);
+``shrink()`` bumps it too, so ``version`` (``(epoch, count)``, the
+result-cache key) is never re-issued by a shrink→grow cycle.  Any
+mutation changes ``version``.
 
 Persistence rides the checkpoint manifest format (`checkpoint.manager`):
 ``save()`` writes an atomic ``step_<N>/{manifest.json, leaf_*.npy}``
@@ -190,13 +192,22 @@ class SketchStore:
         the dropped slots.  The slot *prefix* is kept, so offline IMM's
         first-⌈θ/colors⌉-slots selection stays meaningful and replicas that
         apply the same shrink stay bit-identical.  The cached stack is
-        sliced in place (no resample, no host re-staging); ``version``
-        changes via the batch count, invalidating result caches.
+        sliced in place (no resample, no host re-staging).
+
+        A shrink that drops anything bumps the store epoch: ``version`` is
+        ``(epoch, count)`` and a later grow back to the same count samples
+        NEW batch indices into the re-added slots, so without the bump a
+        shrink→grow cycle would re-issue a previously-seen version and
+        epoch-keyed result caches would serve stale answers against the
+        new pool contents (the autoscaler's normal oscillation pattern).
+        Within one epoch the count only grows, so ``(epoch, count)`` can
+        never repeat.
         """
         keep = max(1, min(int(num_batches), len(self.batches)))
         dropped = list(range(keep, len(self.batches)))
         if not dropped:
             return dropped
+        self.epoch += 1
         self.batches = self.batches[:keep]
         self.batch_epochs = self.batch_epochs[:keep]
         self._truncate_stack(keep)

@@ -24,6 +24,19 @@ import math
 import threading
 
 
+def escape_label(label: str) -> str:
+    """Metric-name-safe form of a user-supplied label (e.g. a tenant id).
+
+    Metric names are dotted paths and `MetricSet.snapshot` nests them by
+    splitting on ``"."``, so a dot inside a label would nest that tenant's
+    counters one level deeper (and drop them from the tier's totals).
+    Percent-escaping ``%`` then ``.`` is injective — distinct labels can
+    never collide after escaping — and keeps names ASCII and readable
+    (``"org.acme"`` → ``"org%2Eacme"``).
+    """
+    return label.replace("%", "%25").replace(".", "%2E")
+
+
 class Counter:
     """Thread-safe monotonic counter."""
 

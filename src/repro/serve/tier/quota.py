@@ -19,8 +19,11 @@ The clock is injectable for deterministic tests.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
+
+from repro.serve.tier.metrics import escape_label
 
 
 class ShedError(RuntimeError):
@@ -28,11 +31,17 @@ class ShedError(RuntimeError):
 
     ``retry_after`` (seconds) is when the tenant's bucket will have refilled
     enough for this request's cost; ``tenant`` names the throttled tenant.
+    ``retry_after`` is ``math.inf`` when the request can NEVER be admitted
+    (``cost`` exceeds the bucket's burst capacity) — don't retry those.
     """
 
     def __init__(self, tenant: str, retry_after: float, cost: float = 1.0):
-        super().__init__(
-            f"tenant {tenant!r} over quota: retry in {retry_after:.3f}s")
+        if math.isinf(retry_after):
+            msg = (f"tenant {tenant!r}: cost {cost:g} exceeds burst "
+                   "capacity — never admissible; do not retry")
+        else:
+            msg = f"tenant {tenant!r} over quota: retry in {retry_after:.3f}s"
+        super().__init__(msg)
         self.tenant = tenant
         self.retry_after = retry_after
         self.cost = cost
@@ -96,7 +105,11 @@ class AdmissionController:
 
         The shed path never blocks and never takes partial tokens — a shed
         request leaves the bucket exactly as it found it, so retrying at
-        ``retry_after`` genuinely succeeds absent competing traffic.
+        ``retry_after`` genuinely succeeds absent competing traffic.  A
+        ``cost`` above the bucket's burst capacity can never be satisfied
+        by waiting (tokens cap at burst); it sheds with
+        ``retry_after=math.inf`` so clients don't retry forever on a
+        finite hint that can never come true.
         """
         with self._lock:
             if tenant not in self._buckets:
@@ -106,15 +119,22 @@ class AdmissionController:
             if bucket is None:
                 self._count(tenant, "admitted")
                 return
-            bucket.refill(self._clock())
-            if bucket.tokens >= cost:
-                bucket.tokens -= cost
-                self._count(tenant, "admitted")
-                return
-            retry_after = (cost - bucket.tokens) / bucket.rate
+            if cost > bucket.burst:
+                retry_after = math.inf
+            else:
+                bucket.refill(self._clock())
+                if bucket.tokens >= cost:
+                    bucket.tokens -= cost
+                    self._count(tenant, "admitted")
+                    return
+                retry_after = (cost - bucket.tokens) / bucket.rate
         self._count(tenant, "shed")
         raise ShedError(tenant, retry_after, cost)
 
     def _count(self, tenant: str, what: str) -> None:
         if self._metrics is not None:
-            self._metrics.counter(f"tenant.{tenant}.{what}").add()
+            # Tenant ids are user-supplied: escape so a dotted id (e.g.
+            # "org.acme") can't nest under extra snapshot levels and fall
+            # out of the tier's admitted/shed totals.
+            self._metrics.counter(
+                f"tenant.{escape_label(tenant)}.{what}").add()

@@ -26,7 +26,11 @@ refresh applied to every replica resamples the same slots with the same
 RNG streams: after the sweep all replicas are **bit-identical again at
 the new epoch**.  Mid-sweep, replicas disagree only on version — which
 `gather()` turns into a retriable error instead of a wrong answer.
-`start_refresh(every)` runs the sweep on a background thread.
+Sweeps are mutually exclusive: `refresh()` and `scale_to()` hold a
+group-wide mutation lock for the whole sweep, so every replica sees the
+same mutation sequence in the same order even with the background
+refresh and autoscale threads both running.  `start_refresh(every)` runs
+the sweep on a background thread.
 """
 from __future__ import annotations
 
@@ -98,6 +102,17 @@ class ReplicaGroup:
         self.policy = policy
         self._metrics = metrics
         self._rr = itertools.count()
+        # Serializes group-wide mutation sweeps (refresh / scale_to).  Per-
+        # replica atomicity (mutate_store) is NOT enough: if the background
+        # refresh sweep and the autoscaler's scale sweep interleaved,
+        # replica 0 could apply refresh-then-ensure while replica 1 applied
+        # ensure-then-refresh — each order consumes batch indices (RNG
+        # streams) into different slots, so the replicas would permanently
+        # diverge while still agreeing on (epoch, count) and consistent()
+        # could not tell.  Holding this lock for the FULL sweep guarantees
+        # every replica applies the same mutation sequence in the same
+        # order.
+        self._mutate_lock = threading.Lock()
         self._refresher: threading.Thread | None = None
         self._stop = threading.Event()
 
@@ -144,9 +159,13 @@ class ReplicaGroup:
         Waits for every future, re-raises the first failure, and checks all
         replies carry the SAME pool version — else `EpochMixError` (the
         caller retries; by then the refresh sweep has converged).  Single
-        replies can't mix and pass trivially.
+        replies can't mix and pass trivially.  ``timeout`` bounds the WHOLE
+        gather (one deadline shared across the futures), not each future.
         """
-        values = [f.result(timeout) for f in futures]
+        deadline = None if timeout is None else time.monotonic() + timeout
+        values = [f.result(None if deadline is None
+                           else deadline - time.monotonic())
+                  for f in futures]
         versions = {f.pool_version for f in futures}
         if len(versions) > 1:
             raise EpochMixError(versions)
@@ -155,20 +174,25 @@ class ReplicaGroup:
     # ------------------------------------------------- epoch-swap refresh
     def refresh(self, fraction: float = 0.25) -> list[int]:
         """Refresh every replica (atomic per replica, identical streams);
-        returns the resampled slots (same on every replica)."""
+        returns the resampled slots (same on every replica).  The whole
+        sweep holds the group mutation lock so it can never interleave
+        with `scale_to` (see ``_mutate_lock``)."""
         slots: list[int] = []
-        for r in self.replicas:
-            slots = r.frontend.refresh_now(fraction)
+        with self._mutate_lock:
+            for r in self.replicas:
+                slots = r.frontend.refresh_now(fraction)
         return slots
 
     def scale_to(self, num_batches: int) -> None:
         """Grow/shrink every replica's pool to ``num_batches`` slots, each
-        swap atomic per replica.  Same mutation + same stream trajectory ⇒
-        replicas stay bit-identical at the new size."""
-        for r in self.replicas:
-            r.frontend.mutate_store(
-                lambda store: (store.ensure(num_batches),
-                               store.shrink(num_batches)))
+        swap atomic per replica and the whole sweep exclusive with
+        `refresh` (group mutation lock).  Same mutation + same stream
+        trajectory ⇒ replicas stay bit-identical at the new size."""
+        with self._mutate_lock:
+            for r in self.replicas:
+                r.frontend.mutate_store(
+                    lambda store: (store.ensure(num_batches),
+                                   store.shrink(num_batches)))
 
     def start_refresh(self, every: float, fraction: float = 0.25) -> None:
         """Background replica-refresh sweep every ``every`` seconds."""

@@ -21,7 +21,10 @@ tier histogram (per-query-kind + overall) and counts per-tenant serves.
 counts, shed rate, latency percentiles (p50/p99/p999), per-replica
 dispatch counts + queue depth + pool version, cache hit rates (through
 `ResultCache.stats()` — the atomic snapshot), and the autoscaler's last
-decision when one is attached.
+decision when one is attached.  Tenant ids appear under
+`metrics.escape_label` form (``"org.acme"`` → ``"org%2Eacme"``) so a
+dotted id can't nest deeper than the ``tenant.<id>.<counter>`` level the
+totals sum over.
 """
 from __future__ import annotations
 
@@ -86,7 +89,8 @@ class ServingTier:
                                                     deadline=deadline)
         hist_all = self.metrics.hist("latency.all")
         hist_kind = self.metrics.hist(f"latency.{kind}")
-        served = self.metrics.counter(f"tenant.{tenant}.served")
+        served = self.metrics.counter(
+            f"tenant.{metrics_lib.escape_label(tenant)}.served")
 
         def record(f):
             if f.cancelled() or f.exception() is not None:

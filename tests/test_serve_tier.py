@@ -2,6 +2,9 @@
 epoch-consistency, signal-driven autoscaling, metrics, and the end-to-end
 acceptance path (sheds + bit-identity vs a direct engine + mid-stream
 refresh guard)."""
+import concurrent.futures
+import itertools
+import math
 import threading
 import time
 
@@ -74,6 +77,36 @@ def test_quota_per_tenant_isolation_and_unmetered():
         adm.admit("vip")                      # unmetered never sheds
     assert adm.quota("vip") is None
     assert adm.quota("a") == (1.0, 1.0)
+
+
+def test_quota_cost_over_burst_sheds_non_retriably():
+    """A cost above burst can never be admitted (tokens cap at burst), so
+    its ShedError must carry retry_after=inf — not a finite hint that
+    would make a well-behaved client retry forever."""
+    clock = FakeClock()
+    adm = AdmissionController(rate=2.0, burst=3, clock=clock)
+    with pytest.raises(ShedError) as ei:
+        adm.admit("t", cost=5.0)
+    assert math.isinf(ei.value.retry_after)
+    assert "do not retry" in str(ei.value)
+    for _ in range(3):                        # the bucket was left untouched
+        adm.admit("t")
+
+
+def test_quota_dotted_tenant_ids_stay_in_totals():
+    """A tenant id containing '.' must not nest deeper in the metrics tree
+    (that would silently drop it from the tier's admitted/shed totals)."""
+    clock, m = FakeClock(), MetricSet()
+    adm = AdmissionController(rate=1.0, burst=1, clock=clock, metrics=m)
+    adm.admit("org.acme")
+    with pytest.raises(ShedError):
+        adm.admit("org.acme")
+    snap = m.snapshot()
+    assert snap["tenant"]["org%2Eacme"] == {"admitted": 1, "shed": 1}
+    # escaping is injective: a tenant literally named "org%2Eacme" cannot
+    # collide with the escaped form of "org.acme"
+    from repro.serve.tier.metrics import escape_label
+    assert escape_label("org.acme") != escape_label("org%2Eacme")
 
 
 def test_quota_counts_into_metrics():
@@ -158,6 +191,25 @@ def test_store_shrink_keeps_slot_prefix(graph):
         np.asarray(store.visited_stack())[:2], before[:2])
 
 
+def test_store_shrink_then_grow_never_reissues_a_version(graph):
+    """Version A-B-A guard: shrink bumps the epoch, so growing back to a
+    previous count (which samples NEW rng streams into the re-added slots)
+    can never reproduce a previously-issued (epoch, count) — epoch-keyed
+    result caches must miss against the new pool contents."""
+    store = make_store(graph)
+    pre_shrink = store.version
+    old_tail_index = store.batches[-1].batch_index
+    seen = {pre_shrink}
+    store.shrink(2)
+    assert store.version not in seen
+    seen.add(store.version)
+    store.ensure(4)                           # the autoscaler's oscillation
+    assert store.version not in seen, \
+        "shrink→grow reissued a version: stale cache entries would hit"
+    # the re-added slots really are a different sample population
+    assert store.batches[-1].batch_index != old_tail_index
+
+
 # ----------------------------------------------------------------- router
 def _fake_future(value, version):
     import concurrent.futures
@@ -175,6 +227,18 @@ def test_gather_refuses_mixed_epochs():
         ReplicaGroup.gather([_fake_future(1.0, (0, 4)),
                              _fake_future(2.0, (1, 4))])
     assert ei.value.versions == ((0, 4), (1, 4))
+
+
+def test_gather_timeout_is_one_overall_deadline():
+    """gather(timeout=T) bounds the WHOLE gather, not T per future — N
+    never-resolving futures must time out in ~T, not N×T."""
+    pending = [concurrent.futures.Future() for _ in range(4)]
+    for f in pending:
+        f.pool_version = (0, 4)
+    t0 = time.monotonic()
+    with pytest.raises(concurrent.futures.TimeoutError):
+        ReplicaGroup.gather(pending, timeout=0.2)
+    assert time.monotonic() - t0 < 0.6
 
 
 def test_replica_group_policies_and_refresh_convergence(graph):
@@ -208,6 +272,45 @@ def test_replica_group_scale_to_keeps_replicas_identical(graph):
         assert group.num_batches == 3 and group.consistent()
         a, b = (np.asarray(r.store.visited_stack()) for r in group.replicas)
         np.testing.assert_array_equal(a, b)
+
+
+def test_concurrent_refresh_and_scale_sweeps_keep_replicas_identical(graph):
+    """The background refresh sweep and the autoscaler's scale sweep race
+    from different threads; the group mutation lock must keep every
+    replica on the same mutation sequence in the same ORDER.  Without it,
+    replica 0 can apply refresh-then-ensure while replica 1 applies
+    ensure-then-refresh — different rng streams land in different slots
+    and the replicas diverge while still agreeing on version."""
+    store = make_store(graph, batches=3, max_batches=32)
+    with ReplicaGroup.build(store, 2, default_deadline=0.0) as group:
+        start = threading.Barrier(2)
+        sizes = itertools.cycle([4, 2, 5])
+        errors = []
+
+        def run(fn):
+            try:
+                start.wait(10)
+                for _ in range(5):
+                    fn()
+            except Exception as e:            # pragma: no cover
+                errors.append(e)
+
+        threads = [
+            threading.Thread(target=run, args=(lambda: group.refresh(0.5),)),
+            threading.Thread(target=run,
+                             args=(lambda: group.scale_to(next(sizes)),))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(120)
+        assert not errors
+        assert group.consistent()
+        r0, r1 = group.replicas
+        assert r0.store.next_batch_index == r1.store.next_batch_index
+        assert [b.batch_index for b in r0.store.batches] == \
+               [b.batch_index for b in r1.store.batches]
+        np.testing.assert_array_equal(np.asarray(r0.store.visited_stack()),
+                                      np.asarray(r1.store.visited_stack()))
 
 
 # -------------------------------------------------------------- autoscaler
