@@ -17,7 +17,8 @@ def main() -> None:
                             bench_kernels, bench_imm, bench_scaling,
                             bench_serve_influence, bench_distributed_serve,
                             bench_serve_load, bench_pool_build,
-                            bench_scatter_words, roofline)
+                            bench_stream_updates, bench_scatter_words,
+                            roofline)
 
     sections = [
         ("Fig4 work savings / occupancy", lambda: bench_work_savings.run(
@@ -46,6 +47,11 @@ def main() -> None:
          lambda: bench_pool_build.run(
              sweeps=bench_pool_build.standard_sweeps(low_n=1500, gp_n=600,
                                                      batches=8))),
+        ("Streaming deltas: incremental vs cold refresh × churn "
+         "(8 forced CPU devices)",
+         lambda: bench_stream_updates.run(
+             sweeps=bench_stream_updates.standard_sweeps(
+                 churn_n=3000, scale_ns=(3000,), batches=8))),
         ("Fig10/11 device scaling", lambda: bench_scaling.run(
             device_counts=(1, 2, 4, 8))),
         ("Roofline table (from dry-run records)", roofline.table),

@@ -62,11 +62,24 @@ tier_smoke() {
         --tenants 2 --replicas 2 --autoscale
 }
 
+# Streaming-delta smoke: mutate the graph mid-serve through the tier's
+# admission-gated write path (single-device tier with EpochMixError +
+# quota-shed asserts), then the 8-shard data_parallel store, then an LT
+# sparse-frontier pool — each asserts the incrementally-refreshed pool is
+# bit-identical to a cold rebuild on the mutated graph.
+stream_smoke() {
+    python -m repro.launch.serve_influence --stream-smoke
+    python -m repro.launch.serve_influence --stream-smoke --mesh 8x1
+    python -m repro.launch.serve_influence --stream-smoke \
+        --diffusion lt --frontier sparse
+}
+
 if python -m pip install -e . ; then
     python -m pytest -x -q
     graph_parallel_smoke
     work_counter_guard
     tier_smoke
+    stream_smoke
 else
     echo "[ci] pip install failed; running from source tree" >&2
     export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -74,4 +87,5 @@ else
     graph_parallel_smoke
     work_counter_guard
     tier_smoke
+    stream_smoke
 fi

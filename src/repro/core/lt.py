@@ -39,16 +39,24 @@ def normalize_lt_weights(g: csr.Graph) -> csr.Graph:
 
     Incoming weight mass w(v,u) = prob(v,u) / max(1, Σ_in prob(·,u)).
     Idempotent: an already-normalized graph has Σ_in ≤ 1 ⇒ scale 1.
+
+    Order-preserving: only ``prob`` is rewritten — edge array positions
+    (the CSR edge ids that key the counter RNG) and ``indptr`` are kept.
+    Streamed graphs (`repro.stream.apply_delta`) are not src-sorted, so a
+    rebuild through ``csr.from_edges`` would re-sort and renumber every
+    edge id; for sorted graphs the two constructions are bit-identical.
     """
+    import dataclasses
+
     e = g.num_edges
     dst = np.asarray(g.dst)[:e]
     prob = np.asarray(g.prob)[:e].astype(np.float64)
     in_sum = np.zeros(g.num_vertices)
     np.add.at(in_sum, dst, prob)
     scale = 1.0 / np.maximum(in_sum[dst], 1.0)
-    new_prob = (prob * scale).astype(np.float32)
-    return csr.from_edges(np.asarray(g.src)[:e], dst, new_prob,
-                          g.num_vertices, pad_to=g.padded_edges)
+    new_prob = np.asarray(g.prob).copy()
+    new_prob[:e] = (prob * scale).astype(np.float32)
+    return dataclasses.replace(g, prob=jnp.asarray(new_prob))
 
 
 def selection_cum_before(g: csr.Graph) -> np.ndarray:

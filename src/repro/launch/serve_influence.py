@@ -424,6 +424,143 @@ def run_tier(args) -> None:
     print(f"[smoke] PASS in {time.time() - t0:.1f}s")
 
 
+# ---------------------------------------------------------------- streaming
+def run_stream(args, shape: tuple[int, int] | None = None) -> None:
+    """``--stream-smoke``: mutate the graph mid-serve, refresh
+    incrementally, assert bit-identity against a cold rebuild.
+
+    Default mode serves through the tier (2 replicas) and drives
+    `ServingTier.apply_delta`; with ``--mesh Dx1`` the delta lands on a
+    `ShardedSketchStore` instead and the refreshed sharded pool is
+    checked against BOTH a cold rebuild and a single-device pool on the
+    mutated graph.
+    """
+    from repro import stream
+
+    t0 = time.time()
+    rng = np.random.default_rng(args.graph_seed + 1)
+
+    if shape is not None:
+        import jax
+        from repro.serve.distributed import (DistributedQueryEngine,
+                                             ShardedSketchStore)
+        d, m = shape
+        if m != 1:
+            raise SystemExit("--stream-smoke --mesh wants Dx1 (deltas on "
+                             "graph_parallel pools arrive later)")
+        mesh = jax.make_mesh((d,), ("data",))
+        g = build_graph(args)
+        cfg = build_config(args, backend="data_parallel")
+        store = ShardedSketchStore(g, cfg, mesh)
+        store.ensure(args.batches)
+        store.visited_stack()
+        engine = DistributedQueryEngine(store)
+        sig_pre = engine.sigma([[1, 2, 3]])[0]
+        tracker = stream.DirtySlotTracker.for_store(store)
+        delta = stream.random_delta(g, rng, num_deletes=args.queries,
+                                    num_inserts=args.queries)
+        report = stream.incremental_refresh(store, tracker, delta)
+        print(f"[stream] sharded delta: +{report.inserted}/-{report.deleted} "
+              f"edges, {report.touched_row_blocks} row-blocks → "
+              f"{report.dirty_slots}/{report.total_slots} dirty slots "
+              f"resampled in {report.refresh_s:.2f}s "
+              f"(graph epoch {report.graph_epoch})")
+        cold = stream.cold_rebuild_batches(store)
+        for bi, bc in zip(store.batches, cold):
+            assert np.array_equal(np.asarray(bi.visited),
+                                  np.asarray(bc.visited))
+            assert bi.fused_edge_visits == bc.fused_edge_visits
+        single = SketchStore(store.graph, dense_variant(cfg),
+                             g_rev=store.g_rev)
+        single.ensure(len(store.batches))
+        for bi, bs in zip(store.batches, single.batches):
+            assert np.array_equal(np.asarray(bi.visited),
+                                  np.asarray(bs.visited))
+        sig_post = engine.sigma([[1, 2, 3]])[0]
+        print(f"[stream] sharded pool ≡ cold rebuild ≡ single-device dense "
+              f"on the mutated graph ({store.num_shards} shards); "
+              f"σ̂(1,2,3) {sig_pre:.1f} → {sig_post:.1f}")
+        print(f"[stream] PASS in {time.time() - t0:.1f}s")
+        return
+
+    # ---- tier mode: the delta is a serving event between live queries
+    from repro.serve.tier import EpochMixError, ServingTier, ShedError
+
+    store = build_store(args)
+    tier = ServingTier.build(store, replicas=args.replicas,
+                             quota_qps=args.quota_qps,
+                             default_deadline=args.deadline)
+    try:
+        n = store.graph.num_vertices
+        queries = [rng.integers(0, n, 3).tolist() for _ in range(4)]
+        pre = [tier.submit_sigma("ops", q) for q in queries]
+        pre_vals = tier.gather(pre)
+        v0 = tier.group.versions()[0]
+
+        delta = stream.random_delta(store.graph, rng,
+                                    num_deletes=args.queries,
+                                    num_inserts=args.queries)
+        report = tier.apply_delta("ops", delta)
+        print(f"[stream] tier delta: +{report.inserted}/-{report.deleted} "
+              f"edges, {report.touched_row_blocks} row-blocks → "
+              f"{report.dirty_slots}/{report.total_slots} dirty slots "
+              f"({report.dirty_fraction:.0%}) resampled in "
+              f"{report.refresh_s:.2f}s")
+
+        # graph-epoch version bump, replicas converged bit-identically
+        v1 = tier.group.versions()[0]
+        assert v1[0] == v0[0] + 1 and tier.group.consistent(), (v0, v1)
+        stacks = [np.asarray(r.store.visited_stack())
+                  for r in tier.group.replicas]
+        assert all(np.array_equal(stacks[0], s) for s in stacks[1:])
+
+        # incremental pool ≡ cold rebuild on the mutated graph
+        r0 = tier.group.replicas[0].store
+        cold = stream.cold_rebuild_batches(r0)
+        for bi, bc in zip(r0.batches, cold):
+            assert np.array_equal(np.asarray(bi.visited),
+                                  np.asarray(bc.visited))
+            assert bi.fused_edge_visits == bc.fused_edge_visits
+        print(f"[stream] replicas converged at graph epoch {v1[0]}, "
+              f"pool ≡ cold rebuild on the mutated graph")
+
+        # pre-delta and post-delta replies must never mix
+        post = [tier.submit_sigma("ops", q) for q in queries]
+        post_vals = tier.gather(post)
+        mixed = False
+        try:
+            tier.gather([pre[0], post[0]])
+        except EpochMixError as e:
+            mixed = True
+            assert len(e.versions) == 2
+        assert mixed, "pre/post-delta replies must be refused as a mix"
+        print(f"[stream] pre/post-delta gather refused (EpochMixError); "
+              f"σ̂ samples {pre_vals[0]:.1f} → {post_vals[0]:.1f}")
+
+        # deltas are admission-gated like any query
+        tier.set_quota("vandal", rate=0.01, burst=1)
+        tier.apply_delta("vandal", stream.EdgeDelta.deletes([], []))
+        shed = False
+        try:
+            tier.apply_delta("vandal", stream.EdgeDelta.deletes([], []))
+        except ShedError as e:
+            shed = True
+            assert e.retry_after > 0
+        assert shed, "quota-starved tenant must shed delta spam"
+
+        snap = tier.snapshot()
+        s = snap["stream"]
+        assert s["deltas_applied"] == 2 and s["tracker"]["slots"] == \
+            len(r0.batches)
+        print(f"[stream] admission gates deltas (1 shed); snapshot: "
+              f"{s['deltas_applied']} deltas, dirty-fraction p50 "
+              f"{s['dirty_fraction']['p50']:.2f}, tracker "
+              f"{s['tracker']['tracker_bytes']} B")
+    finally:
+        tier.close()
+    print(f"[stream] PASS in {time.time() - t0:.1f}s")
+
+
 # -------------------------------------------------------------------- async
 def _async_demo(args, engine) -> None:
     """Deadline-batched front-end under a burst of threaded clients."""
@@ -480,6 +617,11 @@ def main():
                     help="serve through the production tier: per-tenant "
                          "admission control + replica routing "
                          "(+ --autoscale); see repro.serve.tier")
+    ap.add_argument("--stream-smoke", action="store_true",
+                    help="mutate the graph mid-serve (repro.stream delta), "
+                         "refresh the pool incrementally, and assert "
+                         "bit-identity against a cold rebuild; tier mode "
+                         "by default, sharded with --mesh Dx1")
     ap.add_argument("--tenants", type=int, default=3,
                     help="tier tenant count (tenant0 is quota-starved in "
                          "the smoke so the shed path exercises)")
@@ -531,7 +673,12 @@ def main():
                     help="pool snapshot directory (default: temp dir)")
     args = ap.parse_args()
 
-    if args.tier:
+    if args.stream_smoke:
+        shape = _parse_mesh(args.mesh) if args.mesh else None
+        if shape is not None:
+            _force_cpu_host_devices(shape[0] * shape[1])
+        run_stream(args, shape)
+    elif args.tier:
         if args.mesh:
             raise SystemExit("--tier serves single-device replicas; mesh "
                              "backends arrive with cross-process replicas")

@@ -313,6 +313,68 @@ class _BlockSampler(Sampler):
                 for i, b in enumerate(idx)]
 
 
+_DP_BLOCK_FNS: dict = {}
+
+
+def _data_parallel_block_fn(mesh, axis: str, spec: SamplerSpec, ladder):
+    """jit(shard_map) block traversal for the data_parallel backend.
+
+    Cached at MODULE level on (mesh, statics), with the graph / frontier
+    index passed as a traced ARGUMENT rather than baked into the closure
+    as a trace-time constant — so rebinding a sampler to a mutated graph
+    of the same shape (the `repro.stream` delta path builds one per
+    delta) reuses the compiled program instead of recompiling it, and an
+    incremental refresh stays churn-priced.  jit retraces per input
+    shape, so one entry serves every padded block size and graph shape.
+    """
+    key = (mesh, axis, spec.diffusion, spec.frontier, spec.num_colors,
+           spec.max_iters, ladder)
+    fn = _DP_BLOCK_FNS.get(key)
+    if fn is None:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.compat import shard_map
+        from repro.distributed.traversal import run_batch
+
+        def one(data, starts, seed):
+            if spec.frontier == "sparse":
+                # The sparse engine is fully traced (capacity-bucket
+                # conds are shard-local — no collectives), so it drops
+                # straight into the shard_map body; fidx rides along
+                # replicated like the graph.
+                from repro.core import sparse
+                (fidx,) = data
+                if spec.diffusion == "lt":
+                    return sparse.run_fused_lt_sparse(
+                        fidx, starts, spec.num_colors, seed,
+                        max_levels=spec.max_iters, ladder=ladder)
+                return sparse.run_fused_sparse(
+                    fidx, starts, spec.num_colors, seed,
+                    max_levels=spec.max_iters, ladder=ladder).visited
+            if spec.diffusion == "lt":
+                g, cb = data
+                sel = lt.selection_mask_from_cb(g, cb, spec.num_colors,
+                                                seed)
+                return lt.lt_traversal_program(g, sel, starts,
+                                               spec.num_colors,
+                                               spec.max_iters)
+            (g,) = data
+            return run_batch(g, starts, seed, spec.num_colors,
+                             max_levels=spec.max_iters)
+
+        def body(data, starts_local, seeds_local):
+            # Sequential over the shard's local slice: one (V, W)
+            # transient at a time per device, parallel across shards.
+            return jax.lax.map(lambda a: one(data, *a),
+                               (starts_local, seeds_local))
+
+        fn = jax.jit(shard_map(body, mesh,
+                               in_specs=(P(), P(axis), P(axis)),
+                               out_specs=P(axis)))
+        _DP_BLOCK_FNS[key] = fn
+    return fn
+
+
 class DataParallelSampler(_BlockSampler):
     """Batch blocks over a mesh axis via ``shard_map`` — IC and LT.
 
@@ -338,66 +400,32 @@ class DataParallelSampler(_BlockSampler):
         if spec.frontier == "sparse":
             self._fidx, self._ladder = self._sparse_index(
                 None if self._cb is None else np.asarray(self._cb))
-        self._block_fns: dict[int, object] = {}
+        else:
+            self._fidx = self._ladder = None
 
     @property
     def num_shards(self) -> int:
         return int(self.mesh.shape[self.axis])
 
     # ----------------------------------------------------- block program
-    def _block_fn(self, padded: int):
-        """jit(shard_map) traversing ``padded`` batches, cached per size."""
-        fn = self._block_fns.get(padded)
-        if fn is None:
-            from jax.sharding import PartitionSpec as P
-
-            from repro.distributed.compat import shard_map
-            from repro.distributed.traversal import run_batch
-
-            g, spec, cb = self.g_rev, self.spec, self._cb
-
-            def one(starts, seed):
-                if spec.frontier == "sparse":
-                    # The sparse engine is fully traced (capacity-bucket
-                    # conds are shard-local — no collectives), so it drops
-                    # straight into the shard_map body; fidx rides along
-                    # replicated like the graph.
-                    from repro.core import sparse
-                    if spec.diffusion == "lt":
-                        return sparse.run_fused_lt_sparse(
-                            self._fidx, starts, spec.num_colors, seed,
-                            max_levels=spec.max_iters, ladder=self._ladder)
-                    return sparse.run_fused_sparse(
-                        self._fidx, starts, spec.num_colors, seed,
-                        max_levels=spec.max_iters,
-                        ladder=self._ladder).visited
-                if spec.diffusion == "lt":
-                    sel = lt.selection_mask_from_cb(g, cb, spec.num_colors,
-                                                    seed)
-                    return lt.lt_traversal_program(g, sel, starts,
-                                                   spec.num_colors,
-                                                   spec.max_iters)
-                return run_batch(g, starts, seed, spec.num_colors,
-                                 max_levels=spec.max_iters)
-
-            def body(starts_local, seeds_local):
-                # Sequential over the shard's local slice: one (V, W)
-                # transient at a time per device, parallel across shards.
-                return jax.lax.map(lambda a: one(*a),
-                                   (starts_local, seeds_local))
-
-            fn = jax.jit(shard_map(body, self.mesh,
-                                   in_specs=(P(self.axis), P(self.axis)),
-                                   out_specs=P(self.axis)))
-            self._block_fns[padded] = fn
-        return fn
+    def _block_data(self):
+        """The graph-dependent pytree the block program takes as a traced
+        INPUT — what a streaming update swaps out under the cached
+        program (`repro.stream` rebinds samplers per delta)."""
+        if self.spec.frontier == "sparse":
+            return (self._fidx,)
+        if self.spec.diffusion == "lt":
+            return (self.g_rev, self._cb)
+        return (self.g_rev,)
 
     def _block(self, idx: list[int]):
         """(visited, roots) for one padded block: visited (B, V, W) sharded
         ``P(axis)``, roots (B, C) host numpy — starts are derived once and
         shared by the traversal and the returned `RRRBatch` roots."""
         padded, starts, seeds = self._block_inputs(idx, self.num_shards)
-        vis = self._block_fn(padded)(starts, seeds)
+        fn = _data_parallel_block_fn(self.mesh, self.axis, self.spec,
+                                     self._ladder)
+        vis = fn(self._block_data(), starts, seeds)
         # Slicing a sharded array re-gathers; keep the P(axis) layout when
         # the block divides evenly (the pool-build case).
         if padded != len(idx):

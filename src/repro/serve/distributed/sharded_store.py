@@ -258,10 +258,11 @@ class ShardedSketchStore(SketchStore):
                 f"was written under mesh_shape "
                 f"{extra.get('mesh_shape')}) — restore onto a "
                 "(data × model) mesh or with a non-graph_parallel spec")
-        config, epoch, nbi, batches, epochs = cls._restored_fields(
+        config, epoch, nbi, batches, epochs, gepoch = cls._restored_fields(
             directory, config, step, manifest=manifest)
         store = cls(g, config, mesh, axis=axis, g_rev=g_rev)
         store.epoch = epoch
+        store.graph_epoch = gepoch
         store.next_batch_index = nbi
         store.batches = batches
         store.batch_epochs = epochs

@@ -111,6 +111,7 @@ class SketchStore:
         # The sampler owns graph reversal (and LT weight normalization).
         self.g_rev = self.sampler.g_rev
         self.epoch = 0
+        self.graph_epoch = 0
         self.next_batch_index = 0
         self.batches: list[rrr.RRRBatch] = []
         self.batch_epochs: list[int] = []
@@ -154,9 +155,13 @@ class SketchStore:
         return len(self.batches) * self.config.num_colors
 
     @property
-    def version(self) -> tuple[int, int]:
-        """Cache key: changes on refresh AND on pool growth."""
-        return (self.epoch, len(self.batches))
+    def version(self) -> tuple[int, int, int]:
+        """Cache key: changes on a graph delta, on refresh, AND on pool
+        growth.  The leading graph-epoch component makes results computed
+        on different topologies un-mixable (`router.EpochMixError`) and
+        un-cacheable across a `repro.stream` delta even though slot count
+        and refresh epoch look unchanged."""
+        return (self.graph_epoch, self.epoch, len(self.batches))
 
     # ----------------------------------------------------------- sampling
     def _sample_block(self, batch_indices: list[int]) -> list[rrr.RRRBatch]:
@@ -227,6 +232,7 @@ class SketchStore:
         """
         c = self._clone_empty()
         c.epoch = self.epoch
+        c.graph_epoch = self.graph_epoch
         c.next_batch_index = self.next_batch_index
         c.batches = list(self.batches)
         c.batch_epochs = list(self.batch_epochs)
@@ -302,6 +308,50 @@ class SketchStore:
         self._update_stack(slots, new)
         return slots
 
+    # ---------------------------------------------------- streaming deltas
+    def apply_graph_update(self, g: csr.Graph, g_rev: csr.Graph) -> None:
+        """Swap in a mutated graph pair (`repro.stream.apply_delta` output)
+        and bump the graph epoch.
+
+        The graphs must be delta-applied descendants of the current pair —
+        CSR edge ids stable, the reversed graph maintained by applying the
+        reversed delta (NOT `csr.transpose`, which renumbers).  The sampler
+        is rebuilt on the new pair (its frontier index / tile layout / LT
+        CDF caches are per-graph); existing batches keep their recorded
+        RNG streams, so `resample_slots` can re-derive any slot on the new
+        topology while clean slots stay bit-identical.
+
+        ``g_rev`` must already carry the LT normalization invariant when
+        the pool is LT (`stream.apply_delta(..., lt_normalized=True)`
+        maintains it): the sampler re-runs `lt.normalize_lt_weights`,
+        which is idempotent — order-preserving and a no-op on normalized
+        weights — so the ids AND bits both survive.
+        """
+        self.graph = g
+        self.sampler = self._make_sampler(g, self.config.spec, g_rev)
+        self.g_rev = self.sampler.g_rev
+        self.graph_epoch += 1
+
+    def resample_slots(self, slots: list[int]) -> list[rrr.RRRBatch]:
+        """Re-derive the given slots from their RECORDED RNG streams on
+        the current graph (the incremental-refresh write path).
+
+        Unlike `refresh` this allocates no new batch indices and bumps no
+        epoch — slot ``i`` stays the pure function ``(graph, master_seed,
+        batch_index_i)``, so after a graph delta the resampled slots match
+        a cold rebuild of the same indices bit-for-bit, and replicas that
+        apply the same delta + resample stay identical.  The cached stack
+        is updated in place through the donated `_set_slots` scatter.
+        """
+        if not slots:
+            return []
+        new = self._sample_block([self.batches[i].batch_index
+                                  for i in slots])
+        for i, b in zip(slots, new):
+            self.batches[i] = b
+        self._update_stack(slots, new)
+        return new
+
     # -------------------------------------------------------- persistence
     def _tree(self) -> dict[str, Any]:
         return {
@@ -315,7 +365,8 @@ class SketchStore:
                  for b in self.batches], np.int64),
             "counters": np.asarray(
                 [self.epoch, self.next_batch_index,
-                 self.config.master_seed, self.config.num_colors], np.int64),
+                 self.config.master_seed, self.config.num_colors,
+                 self.graph_epoch], np.int64),
         }
 
     def _manifest_extra(self) -> dict:
@@ -341,10 +392,10 @@ class SketchStore:
     @classmethod
     def _restored_fields(cls, directory: str, config: PoolConfig,
                          step: int | None, manifest: dict | None = None):
-        """(config, epoch, next_batch_index, batches, batch_epochs) of a
-        snapshot.  Leaves load as host numpy; each mask is placed via
-        ``cls._mask_array``, so the whole pool never transits one device
-        unless the subclass wants it to."""
+        """(config, epoch, next_batch_index, batches, batch_epochs,
+        graph_epoch) of a snapshot.  Leaves load as host numpy; each mask
+        is placed via ``cls._mask_array``, so the whole pool never
+        transits one device unless the subclass wants it to."""
         if manifest is None:
             step, manifest = cls._resolve_snapshot(directory, step)
         saved_spec = manifest.get("extra", {}).get("sampler_spec")
@@ -375,7 +426,10 @@ class SketchStore:
                          int(visits[i, 1]))
             for i in range(visited.shape[0])]
         epochs = [int(e) for e in np.asarray(tree["batch_epochs"])]
-        return config, int(counters[0]), int(counters[1]), batches, epochs
+        # Pre-streaming snapshots carry 4 counters (no graph epoch): 0.
+        graph_epoch = int(counters[4]) if counters.shape[0] > 4 else 0
+        return (config, int(counters[0]), int(counters[1]), batches, epochs,
+                graph_epoch)
 
     @classmethod
     def restore(cls, directory: str, g: csr.Graph,
@@ -383,10 +437,11 @@ class SketchStore:
                 step: int | None = None,
                 g_rev: csr.Graph | None = None) -> "SketchStore":
         """Rebuild a bit-identical pool from the latest (or given) snapshot."""
-        config, epoch, nbi, batches, epochs = cls._restored_fields(
+        config, epoch, nbi, batches, epochs, gepoch = cls._restored_fields(
             directory, config if config is not None else PoolConfig(), step)
         store = cls(g, config, g_rev=g_rev)
         store.epoch = epoch
+        store.graph_epoch = gepoch
         store.next_batch_index = nbi
         store.batches = batches
         store.batch_epochs = epochs

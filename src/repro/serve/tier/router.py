@@ -194,6 +194,39 @@ class ReplicaGroup:
                     lambda store: (store.ensure(num_batches),
                                    store.shrink(num_batches)))
 
+    def apply_delta(self, delta, tracker):
+        """Apply a streaming graph delta to EVERY replica: one shared
+        plan (replicas are bit-identical, so one dirty set serves all),
+        then a per-replica atomic swap + dirty-slot resample through
+        `AsyncFrontEnd.mutate_store` — the same lock every flush holds,
+        so an in-flight query is answered entirely pre- or post-delta
+        and stamped with the matching graph-epoch version.
+
+        The whole plan+sweep holds the group mutation lock: a refresh or
+        scale sweep can neither interleave (which would let replicas see
+        delta/refresh in different orders and permanently diverge) nor
+        run against a stale plan.  Returns the `stream.StreamReport`.
+        """
+        from repro.stream import refresh as stream_refresh
+
+        with self._mutate_lock:
+            store0 = self.replicas[0].store
+            plan = stream_refresh.plan_refresh(store0, tracker, delta)
+            t0 = time.perf_counter()
+            for r in self.replicas:
+                r.frontend.mutate_store(
+                    lambda store: stream_refresh.apply_plan(store, plan))
+            refresh_s = time.perf_counter() - t0
+            tracker.sync(store0)
+            tracker.note_delta(len(plan.dirty_slots))
+        return stream_refresh.StreamReport(
+            inserted=plan.applied.inserted, deleted=plan.applied.deleted,
+            touched_row_blocks=len(plan.touched_row_blocks),
+            dirty_slots=len(plan.dirty_slots),
+            total_slots=plan.total_slots,
+            dirty_fraction=plan.dirty_fraction, refresh_s=refresh_s,
+            graph_epoch=store0.graph_epoch)
+
     def start_refresh(self, every: float, fraction: float = 0.25) -> None:
         """Background replica-refresh sweep every ``every`` seconds."""
         if self._refresher is not None:

@@ -50,6 +50,8 @@ class ServingTier:
         self.metrics = metrics if metrics is not None else \
             metrics_lib.MetricSet()
         self.autoscaler = autoscaler
+        self._tracker = None        # DirtySlotTracker, lazy (first delta)
+        self._last_stream = None    # last stream.StreamReport
 
     @classmethod
     def build(cls, store, replicas: int = 2, *,
@@ -119,6 +121,35 @@ class ServingTier:
         """Epoch-consistent results (`router.EpochMixError` on a mix)."""
         return self.group.gather(futures, timeout)
 
+    # ----------------------------------------------------- streaming deltas
+    def apply_delta(self, tenant: str, delta, *, cost: float = 1.0):
+        """Admission-gated streaming graph update — the write front door.
+
+        Charges the tenant's token bucket like any query (`quota.ShedError`
+        propagates — a tenant can't starve the pool with delta spam), then
+        sweeps the delta across every replica (`ReplicaGroup.apply_delta`:
+        one shared dirty-set plan, per-replica atomic swap, graph-epoch
+        version bump).  Returns the `repro.stream.StreamReport`; counters
+        and histograms land under ``stream.*`` in `snapshot()`.
+        """
+        from repro.stream import DirtySlotTracker
+
+        self.admission.admit(tenant, cost)      # ShedError propagates
+        if self._tracker is None:
+            self._tracker = DirtySlotTracker.for_store(
+                self.group.replicas[0].store)
+        report = self.group.apply_delta(delta, self._tracker)
+        self._last_stream = report
+        m = self.metrics
+        m.counter("stream.deltas_applied").add()
+        m.counter("stream.edges_inserted").add(report.inserted)
+        m.counter("stream.edges_deleted").add(report.deleted)
+        m.counter("stream.slots_resampled").add(report.dirty_slots)
+        m.hist("stream.dirty_fraction").record(report.dirty_fraction)
+        m.hist("stream.refresh_s").record(report.refresh_s)
+        m.counter(f"tenant.{metrics_lib.escape_label(tenant)}.served").add()
+        return report
+
     # ------------------------------------------------------- observability
     def snapshot(self) -> dict:
         snap = self.metrics.snapshot()
@@ -140,6 +171,10 @@ class ServingTier:
             if r.frontend.batcher.cache is not None else None,
         } for r in self.group.replicas]
         snap["consistent"] = self.group.consistent()
+        if self._tracker is not None:
+            # Counter/hist snapshots already nest under "stream" (dotted
+            # names); graft the tracker's memory/coverage stats alongside.
+            snap.setdefault("stream", {})["tracker"] = self._tracker.stats()
         if self.autoscaler is not None and self.autoscaler.decisions:
             snap["autoscale_last"] = dataclasses.asdict(
                 self.autoscaler.decisions[-1])

@@ -1,0 +1,29 @@
+"""Streaming graph updates: id-stable CSR deltas, visited-row-block
+dirty tracking, and churn-proportional incremental pool refresh.
+
+    from repro import stream
+
+    delta = stream.EdgeDelta.inserts([3], [17], [0.05])
+    tracker = stream.DirtySlotTracker.for_store(store)
+    report = stream.incremental_refresh(store, tracker, delta)
+    # store now serves the mutated graph; only dirty slots resampled,
+    # bit-identical to a cold rebuild (masks and work counters).
+
+Layer map: `delta` (EdgeDelta / apply_delta — the id-stable CSR
+mutation contract), `dirty` (DirtySlotTracker — slot × row-block
+bitsets), `refresh` (plan/apply + the cold-rebuild reference).  The
+serving tier front door is `ServingTier.apply_delta`.
+"""
+from repro.stream.delta import (AppliedDelta, EdgeDelta, apply_delta,
+                                random_delta, touched_row_blocks)
+from repro.stream.dirty import DirtySlotTracker
+from repro.stream.refresh import (DeltaPlan, StreamReport, apply_plan,
+                                  cold_rebuild_batches, incremental_refresh,
+                                  plan_refresh)
+
+__all__ = [
+    "AppliedDelta", "EdgeDelta", "apply_delta", "random_delta",
+    "touched_row_blocks", "DirtySlotTracker", "DeltaPlan", "StreamReport",
+    "apply_plan", "cold_rebuild_batches", "incremental_refresh",
+    "plan_refresh",
+]

@@ -338,9 +338,13 @@ def main():
         t.start()
     for t in threads:
         t.join()
-    for f, q in futs:
-        got = f.result(timeout=30)
-        assert got == engine.sigma([list(q)])[0], q
+    # Drain every future BEFORE computing references: a direct
+    # engine.sigma here while the dispatch thread is mid-flush would run
+    # two 8-participant collective programs concurrently, and the CPU
+    # backend's shared rendezvous pool can starve-deadlock on that.
+    got = [(f.result(timeout=30), q) for f, q in futs]
+    for v_got, q in got:
+        assert v_got == engine.sigma([list(q)])[0], q
     # no request waited past its deadline (dispatch-start vs submit time);
     # generous epsilon for CPU scheduling jitter
     assert fe.stats.max_queue_wait <= deadline + 0.25, fe.stats
@@ -355,6 +359,47 @@ def main():
     time.sleep(1.6)
     assert engine.store.version == ver_after_close
     print("OK async_frontend")
+
+    # ---- streaming deltas on sharded pools ≡ cold rebuild ≡ 1-device ------
+    # A graph delta swept through the 8-shard data_parallel store via the
+    # incremental (dirty-slot-only) path must leave the pool bit-identical
+    # to (a) a cold rebuild of the same batch indices on the mutated pair
+    # and (b) a 1-device dense SketchStore built fresh on that pair — for
+    # both diffusions.  The donated-scatter stack must track it in place.
+    from repro.stream import (DirtySlotTracker, cold_rebuild_batches,
+                              incremental_refresh, random_delta)
+    for diffusion in ("ic", "lt"):
+        st_cfg = PoolConfig(max_batches=32, spec=sampling.SamplerSpec(
+            diffusion=diffusion, backend="data_parallel", num_colors=64,
+            master_seed=3, tile_size=64, frontier="sparse"))
+        st8 = ShardedSketchStore(g2, st_cfg, mesh8)
+        st8.ensure(8)
+        st8.visited_stack()
+        tracker = DirtySlotTracker.for_store(st8)
+        rng = np.random.default_rng(29)
+        delta = random_delta(st8.graph, rng, num_deletes=5, num_inserts=5)
+        report = incremental_refresh(st8, tracker, delta)
+        assert st8.version[0] == 1 and report.dirty_slots >= 1
+        cold = cold_rebuild_batches(st8)
+        single = SketchStore(st8.graph,
+                             PoolConfig(max_batches=32,
+                                        spec=st_cfg.spec.replace(
+                                            backend="dense")),
+                             g_rev=st8.g_rev)
+        single.ensure(8)
+        for got, want, ref in zip(st8.batches, cold, single.batches):
+            np.testing.assert_array_equal(np.asarray(got.visited),
+                                          np.asarray(want.visited))
+            np.testing.assert_array_equal(np.asarray(got.visited),
+                                          np.asarray(ref.visited))
+            # Counters compare within one backend only: the shard_map
+            # sampler reports the -1 "not tracked" sentinel.
+            assert got.fused_edge_visits == want.fused_edge_visits
+            assert got.unfused_edge_visits == want.unfused_edge_visits
+        np.testing.assert_array_equal(
+            np.asarray(st8.visited_stack()),
+            np.stack([np.asarray(b.visited) for b in cold]))
+    print("OK stream_updates")
 
 
 if __name__ == "__main__":

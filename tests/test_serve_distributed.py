@@ -32,7 +32,8 @@ def test_sharded_serving_equivalence():
                    "OK elastic_restore", "OK data_parallel_sampling",
                    "OK data_parallel_pool", "OK lt_data_parallel",
                    "OK graph_parallel_pool", "OK graph_parallel_manifest",
-                   "OK sparse_frontier", "OK async_frontend"):
+                   "OK sparse_frontier", "OK async_frontend",
+                   "OK stream_updates"):
         assert marker in proc.stdout, proc.stdout
 
 
