@@ -32,10 +32,19 @@ Every cell runs the SAME ensure/refresh sequence, so all cells of a
 (sweep, diffusion) hold bit-identical pools at the end — asserted.
 
 Per row: ``fused_edge_visits`` (summed over the final pool's instrumented
-batches; -1 where the backend doesn't instrument) and
-``active_tile_frac`` (mean per-level fraction of active source row-blocks
-from `core.sparse.profile_traversal` — the Fig. 9 quantity sparse
-execution exploits; identical for dense and sparse rows by construction).
+batches; -1 where the backend doesn't instrument), ``active_tile_frac``
+(mean per-level fraction of active source row-blocks from
+`core.sparse.profile_traversal` — the Fig. 9 quantity sparse execution
+exploits; identical for dense and sparse rows by construction), the 2-D
+residency observables ``visited_rows_device`` / ``pool_mib_device``
+(V/M rows per device when the pool is row-sharded over the model axis),
+and — graph_parallel cells only — ``gather_words_level``: the packed
+words the last refresh block moved over the model axis per traversal
+level.  Dense-frontier rows record the flat all-gather's
+``S·(S−1)·rows·W`` per level; sparse rows record the ButterFly-style
+log(M) pairwise exchange where the compacted frontier fits
+(`gather_capacity_words`) and the dense fallback where it doesn't —
+the words saved per collapsed tail level, measured not claimed.
 
 Runs in a **subprocess** so the forced device count never leaks into the
 parent.  Emits the standard ``BENCH_<name>.json`` shape.
@@ -133,6 +142,29 @@ def _worker(args: dict) -> None:
                         np.testing.assert_array_equal(
                             np.asarray(a.visited), np.asarray(b.visited))
                     visits = [b.fused_edge_visits for b in store.batches]
+                    # 2-D observables: per-device visited-row residency
+                    # (V/M rows when the pool is row-sharded over the
+                    # model axis) and, for graph_parallel cells, the
+                    # packed words the LAST refresh block moved over the
+                    # model axis per level (dense rows record the flat
+                    # all-gather, sparse rows the butterfly/dense mix —
+                    # same refresh sequence, so rows are comparable).
+                    m_rows = getattr(store, "row_shards", 1)
+                    vis_rows = (getattr(store, "padded_vertices",
+                                        g.num_vertices) // m_rows)
+                    pool_mib = (store.bytes_per_batch
+                                * getattr(store, "padded_batches",
+                                          sweep["batches"])
+                                / getattr(store, "num_shards", 1)
+                                / m_rows / 2 ** 20)
+                    gw = getattr(store.sampler, "last_gather_words", None)
+                    if gw is not None:
+                        lv = np.asarray(gw).sum(0)
+                        last = (int(np.max(np.nonzero(lv)[0])) + 1
+                                if lv.any() else 0)
+                        gw_levels = [int(x) for x in lv[:last]]
+                    else:
+                        gw_levels = []
                     row = {
                         "sweep": sweep["name"],
                         "diffusion": diffusion,
@@ -149,6 +181,10 @@ def _worker(args: dict) -> None:
                         "fused_edge_visits": (sum(visits)
                                               if min(visits) >= 0 else -1),
                         "active_tile_frac": round(tile_frac, 4),
+                        "visited_rows_device": vis_rows,
+                        "pool_mib_device": round(pool_mib, 3),
+                        "gather_words_level": gw_levels,
+                        "gather_words": sum(gw_levels),
                     }
                     print("ROW " + json.dumps(row), flush=True)
     print("ENV " + json.dumps({"backend": jax.default_backend(),
@@ -197,14 +233,17 @@ def run(sweeps=None, out=print, json_path="BENCH_pool_build.json"):
             bench_env = json.loads(line[4:])
 
     out("# pool build: sweep,diffusion,backend,frontier,mesh,build_s,"
-        "batches_per_s,refresh_s,fused_edge_visits,active_tile_frac")
+        "batches_per_s,refresh_s,fused_edge_visits,active_tile_frac,"
+        "visited_rows_device,pool_mib_device,gather_words")
     for r in rows:
         out(",".join(str(r[k]) for k in
                      ("sweep", "diffusion", "backend", "frontier", "mesh",
                       "build_s", "batches_per_s", "refresh_s",
-                      "fused_edge_visits", "active_tile_frac")))
+                      "fused_edge_visits", "active_tile_frac",
+                      "visited_rows_device", "pool_mib_device",
+                      "gather_words")))
 
-    record = {"bench": "pool_build", "schema": 2,
+    record = {"bench": "pool_build", "schema": 3,
               "unix_time": int(time.time()), "env": bench_env,
               "params": params, "rows": rows}
     if json_path:

@@ -18,7 +18,7 @@ def main() -> None:
                             bench_serve_influence, bench_distributed_serve,
                             bench_serve_load, bench_pool_build,
                             bench_stream_updates, bench_scatter_words,
-                            roofline)
+                            bench_butterfly_exchange, roofline)
 
     sections = [
         ("Fig4 work savings / occupancy", lambda: bench_work_savings.run(
@@ -33,6 +33,11 @@ def main() -> None:
         ("scatter_or_words packed fast path",
          lambda: bench_scatter_words.run(rows=1 << 12,
                                          counts=(1 << 8, 1 << 11))),
+        ("Butterfly frontier exchange vs flat all-gather "
+         "(8 forced CPU devices)",
+         lambda: bench_butterfly_exchange.run(
+             rows=1 << 11, shard_counts=(8, 6),
+             active_words=(64, 256), iters=5)),
         ("IMM end-to-end", lambda: bench_imm.run(theta_cap=2048)),
         ("Online serving: throughput vs pool size",
          lambda: bench_serve_influence.run(n=1000, pool_sizes=(2, 4, 8))),

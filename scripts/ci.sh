@@ -31,18 +31,24 @@ fi
 
 # Graph-parallel serving smoke: the 2-D (data × model) mesh path end to
 # end on forced host devices — pool build with the graph row-partitioned,
-# bit-identity vs the dense pool, elastic restore, refresh.  One IC and one
-# LT run (each is a separate process, so the forced device count never
-# leaks into the pytest run).
+# pool visited rows sharded V/M over the model axis, bit-identity vs the
+# dense pool, elastic restore, refresh.  One IC and one LT run (each is a
+# separate process, so the forced device count never leaks into the
+# pytest run).
 graph_parallel_smoke() {
     python -m repro.launch.serve_influence --smoke --mesh 2x4 \
         --sampler-backend graph_parallel
     python -m repro.launch.serve_influence --smoke --mesh 2x2 \
         --diffusion lt       # M>1 defaults to graph_parallel
-    # Sparse-frontier leg: compacted per-level expansion + compacted
-    # frontier all-gather over the model axis, checked bit-identical to
-    # the dense-frontier dense-backend reference pool inside the smoke.
+    # Sparse-frontier leg: compacted per-level expansion + the ButterFly
+    # log(M)-stage pairwise exchange of compacted (word_idx, word) pairs
+    # where the frontier fits (dense all-gather fallback where it
+    # doesn't), checked bit-identical to the dense-frontier dense-backend
+    # reference pool inside the smoke; 2x3 exercises the
+    # non-power-of-two dissemination schedule.
     python -m repro.launch.serve_influence --smoke --mesh 2x4 \
+        --sampler-backend graph_parallel --frontier sparse
+    python -m repro.launch.serve_influence --smoke --mesh 2x3 \
         --sampler-backend graph_parallel --frontier sparse
 }
 

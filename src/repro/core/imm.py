@@ -168,7 +168,8 @@ def _count_fn(use_kernel: bool):
 
 
 def greedy_extend_program(visited, active, k: int, use_kernel: bool,
-                          all_reduce=None):
+                          all_reduce=None, embed_counts=None, fetch_row=None,
+                          final_reduce=None):
     """k rounds of greedy selection as one on-device ``lax.fori_loop``.
 
     Each round computes all-vertex marginal gains with the coverage kernel,
@@ -182,25 +183,45 @@ def greedy_extend_program(visited, active, k: int, use_kernel: bool,
     with no second collective, and integer summation makes the sharded
     result bit-identical to the single-device one.
 
+    The remaining hooks extend the same program to a pool whose VERTEX
+    rows are additionally sharded over a model axis (`ShardedSketchStore`
+    row sharding — each shard's ``visited`` is (B_loc, V/M, W)):
+
+    * ``embed_counts`` places a shard's (V_loc,) local counts at its row
+      offset in the global (Vp,) vector BEFORE ``all_reduce`` (which then
+      psums over data AND model — disjoint offsets make the sum exact and
+      the merged counts replicated, so the argmax stays collective-free);
+    * ``fetch_row`` maps the selected GLOBAL vertex to its (B_loc, W)
+      visited row (owning shard contributes, others zero, one psum over
+      model) — the default is the local ``dynamic_index_in_dim``;
+    * ``final_reduce`` merges the uncovered popcount — over the data axis
+      ONLY when rows are sharded (``active`` is replicated across model
+      shards; reusing ``all_reduce`` would overcount M×).  Defaults to
+      ``all_reduce``.
+
     This is a trace-time program, not a jitted function: single-device
     callers go through ``greedy_extend``; the distributed query engine
     (`repro.serve.distributed.engine`) stages it inside a shard_map.
     """
     count = _count_fn(use_kernel)
     merge = all_reduce if all_reduce is not None else (lambda x: x)
+    embed = embed_counts if embed_counts is not None else (lambda x: x)
+    if fetch_row is None:
+        def fetch_row(sel):
+            return jax.lax.dynamic_index_in_dim(visited, sel, axis=1,
+                                                keepdims=False)   # (B, W)
+    final = final_reduce if final_reduce is not None else merge
 
     def body(i, carry):
         seeds, act = carry
-        counts = merge(count(visited, act).sum(0))              # (V,)
+        counts = merge(embed(count(visited, act).sum(0)))       # (Vp,)
         sel = jnp.argmax(counts).astype(jnp.int32)
         seeds = seeds.at[i].set(sel)
-        hit = jax.lax.dynamic_index_in_dim(visited, sel, axis=1,
-                                           keepdims=False)      # (B, W)
-        return seeds, act & ~hit
+        return seeds, act & ~fetch_row(sel)
 
     seeds0 = jnp.zeros((k,), jnp.int32)
     seeds, active = jax.lax.fori_loop(0, k, body, (seeds0, active))
-    uncovered = merge(jnp.sum(bitmask.popcount(active)).astype(jnp.int32))
+    uncovered = final(jnp.sum(bitmask.popcount(active)).astype(jnp.int32))
     return seeds, active, uncovered
 
 

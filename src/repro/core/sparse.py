@@ -142,6 +142,44 @@ def build_frontier_index(g_rev: Graph, tile_rows: int = 128,
         edge_block=edge_block, tile_rows=tile_rows)
 
 
+def patch_frontier_index(fidx: FrontierIndex, g_rev: Graph,
+                         touched_row_blocks,
+                         cb: np.ndarray | None = None) -> FrontierIndex:
+    """Re-derive ONLY the edge blocks of ``touched_row_blocks`` from a
+    values-mutated graph — the churn-priced alternative to the O(|E|)
+    host rebuild after a streaming delta.
+
+    Precondition (the caller's to check — `Sampler.rebind` compares the
+    edge arrays): ``g_rev`` has the SAME ``(src, dst)`` layout and padded
+    length as the graph ``fidx`` was built from, i.e. the delta only
+    changed probabilities in place (tombstone / resurrect / LT renorm).
+    Then block membership, edge ids, and validity are all unchanged, and
+    the patch is a pure gather: for every selected block,
+    ``prob = where(valid, g_rev.prob[eid], 0)`` — exactly what
+    `build_frontier_index` writes — plus the same for the LT
+    selection-CDF prefixes when the index carries them.  Bit-identical
+    to a fresh build by construction; cost scales with the touched
+    blocks, not E.
+    """
+    if (fidx.blk_cb is None) != (cb is None):
+        raise ValueError("cb must be given iff the index carries blk_cb")
+    sel = np.isin(np.asarray(fidx.blk_rowblock),
+                  np.asarray(touched_row_blocks, np.int64))
+    ids = np.flatnonzero(sel)
+    if not len(ids):
+        return fidx
+    ids_j = jnp.asarray(ids, jnp.int32)
+    eid = fidx.blk_eid[ids_j]                       # (k, EB) uint32
+    valid = fidx.blk_valid[ids_j]
+    vals = jnp.where(valid, jnp.asarray(g_rev.prob)[eid], jnp.float32(0))
+    fields = {"blk_prob": fidx.blk_prob.at[ids_j].set(vals)}
+    if cb is not None:
+        cbv = jnp.where(valid, jnp.asarray(cb, jnp.float32)[eid],
+                        jnp.float32(0))
+        fields["blk_cb"] = fidx.blk_cb.at[ids_j].set(cbv)
+    return dataclasses.replace(fidx, **fields)
+
+
 def bucket_ladder(num_blocks: int, capacity: int = 0) -> tuple[int, ...]:
     """Static capacity buckets for the compaction buffer.
 

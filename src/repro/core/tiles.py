@@ -140,6 +140,36 @@ def edge_values_to_tiles(tg: TiledGraph, values: np.ndarray,
                     np.asarray(fill, vals.dtype)).astype(vals.dtype)
 
 
+def edge_slot_map(g: Graph, tile_size: int = TILE):
+    """``(slot (E,) int64, num_tiles)``: CSR edge id → flat index into the
+    ``(nt·T·T,)`` raveled tile stacks of ``from_graph(g, tile_size)``.
+
+    The tile layout is a pure function of ``(src, dst, tile_size)`` — this
+    mirrors `from_graph`'s sort/unique computation without materializing
+    the stacks — so a values-only graph mutation (streaming deltas that
+    tombstone/resurrect/renormalize without changing the edge arrays) can
+    scatter new per-edge values straight into an existing layout:
+    ``stack.reshape(-1)[slot] = new_values``.  Unlike
+    `edge_values_to_tiles` this never consults slot validity, so slots
+    whose probability crosses zero (tombstone ↔ live) take their new
+    value instead of being masked by the stale one.
+    """
+    e = g.num_edges
+    if e == 0:
+        return np.zeros(0, np.int64), 0
+    src = np.asarray(g.src)[:e]
+    dst = np.asarray(g.dst)[:e]
+    ts, td = src // tile_size, dst // tile_size
+    tile_key = td.astype(np.int64) * (ts.max() + 1) + ts
+    order = np.argsort(tile_key, kind="stable")
+    uniq, inv = np.unique(tile_key[order], return_inverse=True)
+    li, lj = src[order] % tile_size, dst[order] % tile_size
+    flat = inv.astype(np.int64) * tile_size * tile_size + li * tile_size + lj
+    slot = np.empty(e, np.int64)
+    slot[order] = flat                 # flat[j] is the slot of edge order[j]
+    return slot, len(uniq)
+
+
 def with_null_tile(tg: TiledGraph) -> TiledGraph:
     """``tg`` with ONE inert tile appended at index ``num_tiles`` — the
     fill target of sparse-frontier compaction (`jnp.nonzero` pads unused

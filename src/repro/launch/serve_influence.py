@@ -244,11 +244,15 @@ def run_distributed(args, shape: tuple[int, int]) -> None:
     store = ShardedSketchStore(g, cfg, mesh)
     store.ensure(args.batches)
     layout = f"data={d}" + (f" × model={m}" if m > 1 else "")
+    per_dev = (store.bytes_per_batch * store.padded_batches
+               / store.num_shards / store.row_shards / 2**20)
     print(f"[serve_influence] sharded pool: {len(store.batches)} batches × "
           f"{store.num_colors} colors over {store.num_shards} shards "
-          f"({layout} mesh; "
-          f"{store.bytes_per_batch * store.padded_batches / store.num_shards / 2**20:.2f} "
-          f"MiB/device, capacity {store.capacity} batches; diffusion "
+          f"({layout} mesh; {per_dev:.2f} "
+          f"MiB/device"
+          + (f", visited rows V/{store.row_shards} per device"
+             if store.row_shards > 1 else "")
+          + f", capacity {store.capacity} batches; diffusion "
           f"{store.spec.diffusion!r}, backend {store.spec.backend!r})")
 
     engine = DistributedQueryEngine(store)
@@ -277,6 +281,24 @@ def run_distributed(args, shape: tuple[int, int]) -> None:
     print(f"[smoke] sharded == single-device: top-{args.k} seeds "
           f"{s8.tolist()}, σ̂={sig8:.1f} bit-identical across "
           f"{store.num_shards} shards")
+
+    # ---- row-sharded pool layout (M > 1): each device holds V/M rows
+    if store.row_shards > 1:
+        stack = store.visited_stack()
+        vloc = store.padded_vertices // store.row_shards
+        assert stack.shape[:2] == (store.padded_batches,
+                                   store.padded_vertices), stack.shape
+        blk = next(iter(stack.addressable_shards)).data
+        assert blk.shape[1] == vloc, (blk.shape, vloc)
+        print(f"[smoke] row-sharded stack {tuple(stack.shape)}: "
+              f"{vloc} visited rows/device "
+              f"(= V/{store.row_shards}), queries still bit-identical")
+    if store.spec.backend == "graph_parallel" and \
+            getattr(store.sampler, "last_gather_words", None) is not None:
+        gw = np.asarray(store.sampler.last_gather_words).sum(0)
+        print(f"[smoke] frontier exchange ({store.spec.frontier}): "
+              f"{[int(x) for x in gw[:6]]}... packed words/level over "
+              f"the model axis, {int(gw.sum())} total")
 
     # ---- elastic restore under a different mesh shape
     ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="sharded_pool_")

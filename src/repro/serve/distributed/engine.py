@@ -13,9 +13,21 @@ pool's slot dim is sharded over a mesh axis and every program runs under
   *merged, replicated* counts, so every shard picks the same seed with no
   second collective, and each updates only its local active-mask slice.
 
+When the store also shards VERTEX rows over the mesh's model axis
+(`ShardedSketchStore.row_shards` > 1 — each device holds only its V/M row
+slice of every local slot), the same programs run 2-D: per-vertex gain
+counts are computed over the local row slice, embedded at the shard's row
+offset, and merged with a psum over **data and model together** (disjoint
+offsets make the sum exact); selected/seed visited rows come back through
+one model-axis psum (rows are disjointly owned, so the integer sum IS the
+row); and reductions over model-replicated state (the active mask, the
+merged covered mask) name the data axis only.  The greedy argmax still
+runs on merged, replicated counts — the vertex padding rows carry all-zero
+masks and can never outscore a real vertex.
+
 All reductions are integer, so the N-shard answer is **bit-identical** to
 the 1-device `QueryEngine` on the same pool — asserted by
-``tests/serve_distributed_check.py``.
+``tests/serve_distributed_check.py`` (including D×M row-sharded meshes).
 
 ``use_kernel`` defaults to the popcount fallback here: the Pallas coverage
 kernel targets TPU lowering and both paths produce identical integer
@@ -62,6 +74,42 @@ class DistributedQueryEngine:
     def _psum(self):
         return functools.partial(jax.lax.psum, axis_name=self.store.axis)
 
+    def _row_layout(self):
+        """``(row_axis, M, Vp, V_loc)`` — the pool's vertex-row sharding
+        (``row_axis`` is None / M == 1 when rows are replicated)."""
+        m = self.store.row_shards
+        vp = self.store.padded_vertices
+        return self.store.row_axis, m, vp, vp // m
+
+    @staticmethod
+    def _row_hooks(vis, row_axis: str, vp: int, vloc: int):
+        """Trace-time helpers for a row-sharded ``vis`` (B_loc, V_loc, W).
+
+        ``take(flat_global_ids) -> (B, n, W)`` — each shard contributes the
+        rows it owns (others zero), one psum over ``row_axis`` merges; row
+        ownership is disjoint so the integer sum IS the exact row, and the
+        result is replicated across model shards.  ``embed(local_counts)``
+        places a shard's (V_loc,) partial at its row offset in the global
+        (Vp,) vector, so a psum over (data, model) yields exact merged
+        counts — pad rows have all-zero masks, hence zero counts, and can
+        never win the greedy argmax over a real vertex (ties break low).
+        """
+        off = jax.lax.axis_index(row_axis) * vloc
+        psum_row = functools.partial(jax.lax.psum, axis_name=row_axis)
+
+        def take(flat):
+            loc = jnp.clip(flat - off, 0, vloc - 1)
+            rows = jnp.take(vis, loc, axis=1)           # (B, n, W)
+            ok = (flat >= off) & (flat < off + vloc)
+            return psum_row(jnp.where(ok[None, :, None], rows,
+                                      jnp.uint32(0)))
+
+        def embed(counts):
+            return jax.lax.dynamic_update_slice(
+                jnp.zeros((vp,), counts.dtype), counts, (off,))
+
+        return take, embed
+
     # ------------------------------------------------------ sharded state
     def _initial_active(self) -> jnp.ndarray:
         """(Bp, W) all-uncovered mask, pad slots zeroed, sharded P(axis).
@@ -84,14 +132,39 @@ class DistributedQueryEngine:
         if fn is None:
             axis, use_kernel = self.store.axis, self.use_kernel
             psum = self._psum()
+            row_axis, m, vp, vloc = self._row_layout()
 
-            def body(vis, act):
-                return imm.greedy_extend_program(vis, act, k, use_kernel,
-                                                 all_reduce=psum)
+            if m > 1:
+                # Row-sharded pool: local gains embedded at the shard's
+                # row offset, ONE psum over (data × model) merges them
+                # (disjoint offsets ⇒ exact), the argmax runs on the
+                # replicated merged (Vp,) counts — same seed on every
+                # shard, no second collective — and the winner's visited
+                # row comes back via one model-axis psum.  The active
+                # mask is replicated across model shards, so the
+                # uncovered popcount reduces over data only.
+                merge = functools.partial(jax.lax.psum,
+                                          axis_name=(axis, row_axis))
+
+                def body(vis, act):
+                    take, embed = self._row_hooks(vis, row_axis, vp, vloc)
+                    return imm.greedy_extend_program(
+                        vis, act, k, use_kernel, all_reduce=merge,
+                        embed_counts=embed,
+                        fetch_row=lambda sel: take(sel[None])[:, 0, :],
+                        final_reduce=psum)
+
+                in_vis = P(axis, row_axis)
+            else:
+                def body(vis, act):
+                    return imm.greedy_extend_program(vis, act, k, use_kernel,
+                                                     all_reduce=psum)
+
+                in_vis = P(axis)
 
             fn = jax.jit(compat.shard_map(
                 body, self.store.mesh,
-                in_specs=(P(axis), P(axis)),
+                in_specs=(in_vis, P(axis)),
                 out_specs=(P(), P(axis), P())))
             self._greedy_fns[k] = fn
         return fn
@@ -100,28 +173,58 @@ class DistributedQueryEngine:
         if self._sigma_fn is None:
             axis, nc = self.store.axis, self.store.num_colors
             psum = self._psum()
+            row_axis, m, vp, vloc = self._row_layout()
 
-            def body(vis, seeds, mask):
-                return engine_lib.sigma_counts_program(vis, seeds, mask, nc,
-                                                       all_reduce=psum)
+            if m > 1:
+                # Seed rows merge over model (disjoint ownership), the
+                # covered mask is then model-replicated, so the count
+                # reduction names the data axis only.
+                def body(vis, seeds, mask):
+                    take, _ = self._row_hooks(vis, row_axis, vp, vloc)
+                    return engine_lib.sigma_counts_program(
+                        vis, seeds, mask, nc, all_reduce=psum,
+                        take_rows=take)
+
+                in_vis = P(axis, row_axis)
+            else:
+                def body(vis, seeds, mask):
+                    return engine_lib.sigma_counts_program(
+                        vis, seeds, mask, nc, all_reduce=psum)
+
+                in_vis = P(axis)
 
             self._sigma_fn = jax.jit(compat.shard_map(
                 body, self.store.mesh,
-                in_specs=(P(axis), P(), P()), out_specs=P()))
+                in_specs=(in_vis, P(), P()), out_specs=P()))
         return self._sigma_fn
 
     def _marginal(self):
         if self._marginal_fn is None:
             axis, nc = self.store.axis, self.store.num_colors
             use_kernel, psum = self.use_kernel, self._psum()
+            row_axis, m, vp, vloc = self._row_layout()
 
-            def body(vis, seeds, mask):
-                return engine_lib.marginal_counts_program(
-                    vis, seeds, mask, nc, use_kernel, all_reduce=psum)
+            if m > 1:
+                merge = functools.partial(jax.lax.psum,
+                                          axis_name=(axis, row_axis))
+
+                def body(vis, seeds, mask):
+                    take, embed = self._row_hooks(vis, row_axis, vp, vloc)
+                    return engine_lib.marginal_counts_program(
+                        vis, seeds, mask, nc, use_kernel, all_reduce=merge,
+                        take_rows=take, embed_counts=embed)
+
+                in_vis = P(axis, row_axis)
+            else:
+                def body(vis, seeds, mask):
+                    return engine_lib.marginal_counts_program(
+                        vis, seeds, mask, nc, use_kernel, all_reduce=psum)
+
+                in_vis = P(axis)
 
             self._marginal_fn = jax.jit(compat.shard_map(
                 body, self.store.mesh,
-                in_specs=(P(axis), P(), P()), out_specs=P()))
+                in_specs=(in_vis, P(), P()), out_specs=P()))
         return self._marginal_fn
 
     # -------------------------------------------------------------- top-k
@@ -151,8 +254,11 @@ class DistributedQueryEngine:
                         excl_mask: jnp.ndarray) -> np.ndarray:
         counts = self._marginal()(self.store.visited_stack(), excl_seeds,
                                   excl_mask)
+        # Row-sharded pools count over (Q, Vp) — drop the vertex padding
+        # (no-op when the stack carries exactly V rows).
         return engine_lib._frozen(
-            np.asarray(counts, np.float64) * self._n / self._theta)
+            np.asarray(counts, np.float64)[:, :self._n]
+            * self._n / self._theta)
 
     def marginal_gains(self, exclude) -> np.ndarray:
         seeds, mask = engine_lib.pad_queries([exclude], self.query_slots,

@@ -34,6 +34,17 @@ and every per-level collective (frontier all-gather) names only ``model``
 — graphs bigger than one device's memory build pools at all, and the
 resulting slots are still bit-identical to a 1-device dense pool.
 
+When the mesh carries the spec's ``model_axis`` (size > 1), the pool's
+VERTEX rows shard over it too: ``visited_stack`` pads V to a multiple of
+M and places ``(Bp, Vp, W)`` with ``P(axis, model_axis)``, so each device
+persistently holds only the V/M row slice of its slot block — the
+serving-side completion of the 2-D story (the sampler already row-shards
+the GRAPH; now the pool it builds is row-sharded at rest too).  The
+distributed query engine reduces coverage locally and merges with one
+psum over data and one over model (`DistributedQueryEngine`), still
+bit-identical to the 1-device engine.  Host-staged batches stay full-V,
+so snapshots remain mesh-shape-free and restore onto any D×M layout.
+
 Refresh reuses the pool allocation: the base class's donated-buffer slot
 scatter (`sketch_store._set_slots`) rewrites only the refreshed slots of
 the sharded stack in place — untouched shards' blocks never move, and the
@@ -108,12 +119,39 @@ class ShardedSketchStore(SketchStore):
         return int(self.mesh.shape[self.axis])
 
     @property
+    def row_axis(self) -> str | None:
+        """Mesh axis the pool's VERTEX rows shard over (the spec's
+        ``model_axis``), or None when the mesh doesn't carry it / it has
+        size 1 — then every device holds full-V rows as before."""
+        ax = self.config.spec.model_axis
+        if ax in self.mesh.axis_names and int(self.mesh.shape[ax]) > 1:
+            return ax
+        return None
+
+    @property
+    def row_shards(self) -> int:
+        ax = self.row_axis
+        return int(self.mesh.shape[ax]) if ax is not None else 1
+
+    @property
+    def padded_vertices(self) -> int:
+        """Vertex count rounded up to a multiple of the row-shard count —
+        the stack's second dim (== V when rows are unsharded)."""
+        m = self.row_shards
+        return -(-self.graph.num_vertices // m) * m
+
+    @property
     def capacity(self) -> int:
-        """Per-shard memory budget × shard count (≥ 1, like the base)."""
+        """Per-shard memory budget × shard count (≥ 1, like the base).
+
+        With row sharding each device holds only V/M rows per local slot,
+        so the per-device budget admits M× the batches — the 2-D story's
+        memory win, priced into admission."""
         cap = self.config.max_batches
         if self.config.memory_budget_mb is not None:
+            per_slot = -(-self.bytes_per_batch // self.row_shards)
             per_shard = int(self.config.memory_budget_mb * 2 ** 20
-                            // self.bytes_per_batch)
+                            // per_slot)
             cap = min(cap, per_shard * self.num_shards)
         return max(cap, 1)
 
@@ -155,13 +193,19 @@ class ShardedSketchStore(SketchStore):
 
     # -------------------------------------------------------------- stack
     def visited_stack(self) -> jnp.ndarray:
-        """(Bp, V, W) stack, zero-padded to ``padded_batches`` and sharded
-        ``P(axis)`` over the slot dim (cached per store version).
+        """(Bp, Vp, W) stack, slot dim zero-padded to ``padded_batches``
+        and sharded ``P(axis)``; with row sharding the vertex dim is ALSO
+        padded to ``padded_vertices`` and sharded ``P(axis, row_axis)``
+        (cached per store version).
 
-        Assembled from per-device blocks — each device receives exactly its
-        own slot block, so the full stack never materializes on any single
-        device.  (Single-process meshes only for now; a multi-host pod
-        would filter to addressable devices.)
+        Assembled from per-device blocks — each device receives exactly
+        its own (slot block × row slice), so the full stack never
+        materializes on any single device and per-device visited-row
+        memory is V/M under row sharding.  Host-staged batches stay
+        full-V: the row slicing is pure placement, which is what lets a
+        snapshot restore onto ANY D×M mesh shape.  (Single-process meshes
+        only for now; a multi-host pod would filter to addressable
+        devices.)
 
         Offline IMM slices a prefix of this (``[:want]``); slicing a
         sharded array is fine — XLA re-gathers as needed.
@@ -171,26 +215,50 @@ class ShardedSketchStore(SketchStore):
         if self._stack is None:
             bp, per = self.padded_batches, self.padded_batches // self.num_shards
             v, w = np.asarray(self.batches[0].visited).shape
-            shape = (bp, v, w)
-            sharding = NamedSharding(self.mesh, P(self.axis))
-            blocks: dict[int, np.ndarray] = {}
+            vp = self.padded_vertices
+            vloc = vp // self.row_shards
+            shape = (bp, vp, w)
+            sharding = NamedSharding(self.mesh, P(self.axis, self.row_axis))
+            blocks: dict[tuple[int, int], np.ndarray] = {}
 
-            def block(lo: int) -> np.ndarray:
-                if lo not in blocks:
-                    rows = [np.asarray(b.visited)
-                            for b in self.batches[lo:lo + per]]
-                    rows += [np.zeros((v, w), rows[0].dtype
+            def block(lo: int, rlo: int) -> np.ndarray:
+                if (lo, rlo) not in blocks:
+                    rows = []
+                    for b in self.batches[lo:lo + per]:
+                        r = np.asarray(b.visited)[rlo:rlo + vloc]
+                        if r.shape[0] < vloc:    # vertex pad, last shard
+                            r = np.pad(r, ((0, vloc - r.shape[0]), (0, 0)))
+                        rows.append(r)
+                    rows += [np.zeros((vloc, w), rows[0].dtype
                                       if rows else np.uint32)
                              ] * (per - len(rows))
-                    blocks[lo] = np.stack(rows)
-                return blocks[lo]
+                    blocks[(lo, rlo)] = np.stack(rows)
+                return blocks[(lo, rlo)]
 
             arrays = [
-                jax.device_put(block(idx[0].start or 0), dev)
+                jax.device_put(block(idx[0].start or 0, idx[1].start or 0),
+                               dev)
                 for dev, idx in sharding.devices_indices_map(shape).items()]
             self._stack = jax.make_array_from_single_device_arrays(
                 shape, sharding, arrays)
         return self._stack
+
+    def _update_stack(self, slots, new_batches) -> None:
+        # The base scatter stacks full-V masks; a row-sharded stack is
+        # padded to Vp rows — pad the refreshed masks to match before the
+        # donated `_set_slots` scatter (which preserves the 2-D placement:
+        # each device rewrites only its own row slice of the touched
+        # slots).
+        if self._stack is None:
+            return
+        vp = self._stack.shape[1]
+        masks = jnp.stack([jnp.asarray(b.visited) for b in new_batches])
+        if masks.shape[1] < vp:
+            masks = jnp.pad(masks,
+                            ((0, 0), (0, vp - masks.shape[1]), (0, 0)))
+        from repro.serve.influence.sketch_store import _set_slots
+        self._stack = _set_slots(self._stack,
+                                 jnp.asarray(slots, jnp.int32), masks)
 
     # -------------------------------------------------------- persistence
     def _manifest_extra(self) -> dict:
@@ -198,14 +266,21 @@ class ShardedSketchStore(SketchStore):
 
         ``mesh_shape`` records the FULL (data × model) layout the pool was
         built under — with a ``graph_parallel`` spec that is the row
-        partition too, which restore validates against the new mesh."""
+        partition too, which restore validates against the new mesh.
+        ``row_layout`` records the vertex-row sharding the stack served
+        under (axis, shard count, padded vertex dim): because the saved
+        leaves are full-V host arrays, the layout is metadata, not a
+        constraint — restore re-slices rows onto ANY new D×M shape."""
         return {**super()._manifest_extra(),
                 "kind": "sharded_sketch_pool",
                 "mesh_axis": self.axis,
                 "num_shards": self.num_shards,
                 "mesh_shape": {str(a): int(self.mesh.shape[a])
                                for a in self.mesh.axis_names},
-                "shard_layout": self.shard_layout()}
+                "shard_layout": self.shard_layout(),
+                "row_layout": {"axis": self.row_axis,
+                               "shards": self.row_shards,
+                               "padded_vertices": self.padded_vertices}}
 
     @staticmethod
     def saved_layout(directory: str, step: int | None = None) -> dict:
@@ -221,12 +296,15 @@ class ShardedSketchStore(SketchStore):
                 g_rev: csr.Graph | None = None) -> "ShardedSketchStore":
         """Rebuild a bit-identical pool, re-slotted onto ``mesh``.
 
-        The new mesh may have any shape along the slot axis — the
-        snapshot's slot-ordered global arrays are simply re-sliced into the
-        new axis's contiguous blocks (the recorded layout of the *saving*
-        mesh is metadata, not a constraint).  Masks load straight from disk
-        to host (``_restored_fields`` with host placement), so restore
-        never transits the pool through a single device.
+        The new mesh may have any shape along the slot axis AND the row
+        axis — the snapshot's slot-ordered, full-V global arrays are
+        simply re-sliced into the new mesh's contiguous (slot block × row
+        slice) blocks: a pool saved under a 2×4 mesh restores onto 4×2,
+        8×1, or a single device with identical query answers (the
+        recorded ``shard_layout`` / ``row_layout`` of the *saving* mesh
+        are metadata, not constraints).  Masks load straight from disk to
+        host (``_restored_fields`` with host placement), so restore never
+        transits the pool through a single device.
 
         With no ``config``, the snapshot's recorded `SamplerSpec` is
         adopted wholesale — a pool built graph-parallel (because the graph

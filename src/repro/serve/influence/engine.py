@@ -51,42 +51,65 @@ def pad_queries(seed_sets, query_slots: int, max_seeds: int):
     return jnp.asarray(seeds), jnp.asarray(mask)
 
 
-def _union_rows(visited, seeds, mask):
-    """OR of the selected mask rows: (B,V,W) × (Q,S) → (B,Q,W) covered."""
+def _union_rows(visited, seeds, mask, take_rows=None):
+    """OR of the selected mask rows: (B,V,W) × (Q,S) → (B,Q,W) covered.
+
+    ``take_rows`` overrides the row gather when the vertex dim is sharded
+    (`ShardedSketchStore` row sharding): it maps flat GLOBAL seed ids to
+    (B, Q·S, W) rows — the owning model shard contributes its local row,
+    one psum over the model axis merges (rows are disjointly owned, so
+    integer sum ≡ the exact row), and the result is replicated across
+    model shards.
+    """
     b, v, w = visited.shape
     q, s = seeds.shape
-    rows = jnp.take(visited, seeds.reshape(-1), axis=1).reshape(b, q, s, w)
+    flat = seeds.reshape(-1)
+    rows = (jnp.take(visited, flat, axis=1) if take_rows is None
+            else take_rows(flat)).reshape(b, q, s, w)
     rows = jnp.where(mask[None, :, :, None], rows, jnp.uint32(0))
     return jax.lax.reduce(rows, jnp.uint32(0), jax.lax.bitwise_or, (2,))
 
 
 def sigma_counts_program(visited, seeds, mask, num_colors: int,
-                         all_reduce=None):
+                         all_reduce=None, take_rows=None):
     """Covered-color counts per query slot: (Q,) int32.
 
     Trace-time program (callers jit).  ``all_reduce`` merges per-shard
     partial counts when the batch dim is sharded — one collective per flush,
-    bit-identical to single-device because the reduction is integer.
+    bit-identical to single-device because the reduction is integer.  With
+    vertex rows ALSO sharded, pass ``take_rows`` (see `_union_rows`) and
+    keep ``all_reduce`` over the batch axis only: the merged covered mask
+    is replicated across model shards, so reducing over both axes would
+    overcount M×.
     """
     tail = jnp.asarray(bitmask.color_tail_mask(num_colors))
-    covered = _union_rows(visited, seeds, mask) & tail[None, None, :]
+    covered = _union_rows(visited, seeds, mask, take_rows) \
+        & tail[None, None, :]
     counts = jnp.sum(bitmask.popcount(covered), axis=(0, 2)).astype(jnp.int32)
     return all_reduce(counts) if all_reduce is not None else counts
 
 
 def marginal_counts_program(visited, excl_seeds, excl_mask, num_colors: int,
-                            use_kernel: bool, all_reduce=None):
+                            use_kernel: bool, all_reduce=None,
+                            take_rows=None, embed_counts=None):
     """Per-vertex marginal-gain counts per exclusion slot: (Q, V) int32.
 
     Trace-time program (callers jit); ``all_reduce`` as in
-    ``sigma_counts_program``.
+    ``sigma_counts_program``.  With vertex rows sharded, ``take_rows``
+    gathers the exclusion rows globally and ``embed_counts`` places each
+    shard's (V_loc,) local gains at its row offset in the padded (Vp,)
+    vector BEFORE ``all_reduce`` — which then psums over data AND model
+    (offsets are disjoint, so the sum is exact and the (Q, Vp) result
+    replicated; callers slice ``[:, :num_vertices]``).
     """
     tail = jnp.asarray(bitmask.color_tail_mask(num_colors))
     active = tail[None, None, :] & ~_union_rows(visited, excl_seeds,
-                                                excl_mask)     # (B, Q, W)
+                                                excl_mask,
+                                                take_rows)     # (B, Q, W)
     count = (ops.cover_counts_batched if use_kernel
              else imm._count_fn(False))
-    counts = jax.lax.map(lambda act: count(visited, act).sum(0),
+    embed = embed_counts if embed_counts is not None else (lambda x: x)
+    counts = jax.lax.map(lambda act: embed(count(visited, act).sum(0)),
                          jnp.swapaxes(active, 0, 1))           # (Q, V)
     return all_reduce(counts) if all_reduce is not None else counts
 

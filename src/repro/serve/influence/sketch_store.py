@@ -309,17 +309,26 @@ class SketchStore:
         return slots
 
     # ---------------------------------------------------- streaming deltas
-    def apply_graph_update(self, g: csr.Graph, g_rev: csr.Graph) -> None:
+    def apply_graph_update(self, g: csr.Graph, g_rev: csr.Graph,
+                           touched_row_blocks=None) -> None:
         """Swap in a mutated graph pair (`repro.stream.apply_delta` output)
         and bump the graph epoch.
 
-        The graphs must be delta-applied descendants of the current pair —
-        CSR edge ids stable, the reversed graph maintained by applying the
-        reversed delta (NOT `csr.transpose`, which renumbers).  The sampler
-        is rebuilt on the new pair (its frontier index / tile layout / LT
-        CDF caches are per-graph); existing batches keep their recorded
+        For the streaming path the graphs are delta-applied descendants of
+        the current pair — CSR edge ids stable, the reversed graph
+        maintained by applying the reversed delta (NOT `csr.transpose`,
+        which renumbers).  The sampler is REBOUND (`Sampler.rebind`): a
+        values-only delta that names its ``touched_row_blocks`` patches
+        the sampler's per-graph indexes in place (churn-priced), anything
+        structural rebuilds them.  Existing batches keep their recorded
         RNG streams, so `resample_slots` can re-derive any slot on the new
         topology while clean slots stay bit-identical.
+
+        The other caller is `stream.compact` — a rebuilt (renumbered!)
+        graph pair is fine too because rebind detects the structural
+        change and rebuilds, but then EVERY slot must be resampled (edge
+        ids moved, so every slot's bits are suspect), which the compaction
+        path does.
 
         ``g_rev`` must already carry the LT normalization invariant when
         the pool is LT (`stream.apply_delta(..., lt_normalized=True)`
@@ -328,7 +337,7 @@ class SketchStore:
         weights — so the ids AND bits both survive.
         """
         self.graph = g
-        self.sampler = self._make_sampler(g, self.config.spec, g_rev)
+        self.sampler = self.sampler.rebind(g, g_rev, touched_row_blocks)
         self.g_rev = self.sampler.g_rev
         self.graph_epoch += 1
 

@@ -227,6 +227,31 @@ class ReplicaGroup:
             dirty_fraction=plan.dirty_fraction, refresh_s=refresh_s,
             graph_epoch=store0.graph_epoch)
 
+    def compact(self) -> float:
+        """Tombstone-compaction rebuild swept over every replica; returns
+        the tombstone fraction that was reclaimed.
+
+        ONE shared rebuilt pair (`stream.compact_graph`) serves the whole
+        group — each replica swaps it in and resamples EVERY slot at its
+        recorded batch indices, so the group re-converges bit-identical
+        on the renumbered edge ids.  Holds the group mutation lock for
+        the whole sweep, exclusive with refresh / scale / delta sweeps.
+        """
+        from repro.stream import compact as compact_lib
+
+        with self._mutate_lock:
+            store0 = self.replicas[0].store
+            frac = compact_lib.tombstone_fraction(store0.graph)
+            g2, g_rev2 = compact_lib.compact_graph(store0.graph)
+
+            def swap(store):
+                store.apply_graph_update(g2, g_rev2)
+                store.resample_slots(list(range(len(store.batches))))
+
+            for r in self.replicas:
+                r.frontend.mutate_store(swap)
+        return frac
+
     def start_refresh(self, every: float, fraction: float = 0.25) -> None:
         """Background replica-refresh sweep every ``every`` seconds."""
         if self._refresher is not None:

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import threading
 import time
 
 from repro.serve.tier import metrics as metrics_lib
@@ -52,6 +53,8 @@ class ServingTier:
         self.autoscaler = autoscaler
         self._tracker = None        # DirtySlotTracker, lazy (first delta)
         self._last_stream = None    # last stream.StreamReport
+        self._compactor: threading.Thread | None = None
+        self._compact_stop = threading.Event()
 
     @classmethod
     def build(cls, store, replicas: int = 2, *,
@@ -150,6 +153,30 @@ class ServingTier:
         m.counter(f"tenant.{metrics_lib.escape_label(tenant)}.served").add()
         return report
 
+    def maybe_compact(self, threshold: float = 0.10) -> bool:
+        """Tombstone-compaction policy: when the forward graph's tombstone
+        fraction exceeds ``threshold``, sweep a `ReplicaGroup.compact`
+        rebuild (every slot resampled, replicas re-converge
+        bit-identically on the renumbered edge ids) and count it under
+        ``stream.compactions``.  Returns whether a compaction ran.
+
+        This is the knob the id-stable delta policy needs: interior
+        tombstones are individually cheap but accumulate without bound;
+        the background loop (``start_background(compact_every=...)``)
+        polls this instead of compacting on a timer, so a read-heavy tier
+        with little churn never pays the rebuild.
+        """
+        from repro.stream import compact as compact_lib
+
+        frac = compact_lib.tombstone_fraction(
+            self.group.replicas[0].store.graph)
+        if frac <= threshold:
+            return False
+        self.group.compact()
+        self.metrics.counter("stream.compactions").add()
+        self.metrics.hist("stream.compacted_fraction").record(frac)
+        return True
+
     # ------------------------------------------------------- observability
     def snapshot(self) -> dict:
         snap = self.metrics.snapshot()
@@ -186,16 +213,35 @@ class ServingTier:
     # ---------------------------------------------------------- lifecycle
     def start_background(self, *, refresh_every: float | None = None,
                          refresh_fraction: float = 0.25,
-                         autoscale_every: float | None = None) -> None:
-        """Arm the background loops: replica-sweep refresh + autoscaling."""
+                         autoscale_every: float | None = None,
+                         compact_every: float | None = None,
+                         compact_threshold: float = 0.10) -> None:
+        """Arm the background loops: replica-sweep refresh, autoscaling,
+        and the tombstone-compaction poll (`maybe_compact` every
+        ``compact_every`` seconds against ``compact_threshold``)."""
         if refresh_every is not None:
             self.group.start_refresh(refresh_every, refresh_fraction)
         if autoscale_every is not None:
             if self.autoscaler is None:
                 raise RuntimeError("tier built without autoscale config")
             self.autoscaler.start(autoscale_every)
+        if compact_every is not None:
+            if self._compactor is not None:
+                raise RuntimeError("compaction thread already running")
+
+            def loop():
+                while not self._compact_stop.wait(compact_every):
+                    self.maybe_compact(compact_threshold)
+
+            self._compactor = threading.Thread(target=loop, daemon=True,
+                                               name="tier-compact")
+            self._compactor.start()
 
     def close(self, timeout: float | None = None) -> None:
+        self._compact_stop.set()
+        if self._compactor is not None:
+            self._compactor.join(timeout)
+            self._compactor = None
         if self.autoscaler is not None:
             self.autoscaler.close(timeout)
         self.group.close(timeout)

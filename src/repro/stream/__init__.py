@@ -11,9 +11,13 @@ dirty tracking, and churn-proportional incremental pool refresh.
 
 Layer map: `delta` (EdgeDelta / apply_delta — the id-stable CSR
 mutation contract), `dirty` (DirtySlotTracker — slot × row-block
-bitsets), `refresh` (plan/apply + the cold-rebuild reference).  The
-serving tier front door is `ServingTier.apply_delta`.
+bitsets), `refresh` (plan/apply + the cold-rebuild reference), `compact`
+(the periodic tombstone-dropping rebuild that bounds id-stability's
+cost).  The serving tier front door is `ServingTier.apply_delta`, with
+`ServingTier.maybe_compact` as the compaction policy hook.
 """
+from repro.stream.compact import (compact_graph, compact_store,
+                                  tombstone_fraction)
 from repro.stream.delta import (AppliedDelta, EdgeDelta, apply_delta,
                                 random_delta, touched_row_blocks)
 from repro.stream.dirty import DirtySlotTracker
@@ -25,5 +29,5 @@ __all__ = [
     "AppliedDelta", "EdgeDelta", "apply_delta", "random_delta",
     "touched_row_blocks", "DirtySlotTracker", "DeltaPlan", "StreamReport",
     "apply_plan", "cold_rebuild_batches", "incremental_refresh",
-    "plan_refresh",
+    "plan_refresh", "compact_graph", "compact_store", "tombstone_fraction",
 ]

@@ -94,8 +94,12 @@ def plan_refresh(store, tracker: DirtySlotTracker,
 
 def apply_plan(store, plan: DeltaPlan) -> None:
     """Swap the mutated pair into ``store`` and resample its dirty slots
-    (same plan → same mutation on every replica of a group)."""
-    store.apply_graph_update(plan.g, plan.g_rev)
+    (same plan → same mutation on every replica of a group).  The touched
+    row blocks ride along so a values-only delta patches the sampler's
+    frontier index in place (`Sampler.rebind`) instead of rebuilding it
+    O(|E|) host-side."""
+    store.apply_graph_update(plan.g, plan.g_rev,
+                             touched_row_blocks=plan.touched_row_blocks)
     store.resample_slots(plan.dirty_slots)
 
 

@@ -311,6 +311,107 @@ def main():
             assert sig_sp == sig_rf
     print("OK sparse_frontier")
 
+    # ---- butterfly log(M) frontier exchange: traffic + bit-identity -------
+    # The sparse graph_parallel leg is a ⌈log₂M⌉-stage pairwise exchange
+    # of compacted (word_idx, word) pairs.  Per level it must move FEWER
+    # packed words over the model axis than the dense all-gather whenever
+    # it engages, and the pool must stay bit-identical to the dense
+    # single-device reference — including on a non-power-of-two model
+    # axis (M=3, where the dissemination schedule's last stage overlaps
+    # and the `have` bitmap dedups re-delivered blocks) and with a
+    # capacity so tiny the dense early levels overflow back to the flat
+    # all-gather via lax.cond.
+    from jax.sharding import Mesh
+    mesh_bf = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    mesh_m3 = Mesh(np.array(jax.devices()[:6]).reshape(2, 3),
+                   ("data", "model"))
+    for diffusion in ("ic", "lt"):
+        ref_bf = SketchStore(g2, PoolConfig(
+            max_batches=32, spec=sampling.SamplerSpec(
+                diffusion=diffusion, num_colors=64, master_seed=3)))
+        ref_bf.ensure(4)
+
+        def bf_store(mesh_dm, capacity, frontier="sparse"):
+            st = ShardedSketchStore(g2, PoolConfig(
+                max_batches=32, spec=sampling.SamplerSpec(
+                    diffusion=diffusion, backend="graph_parallel",
+                    num_colors=64, master_seed=3, frontier=frontier,
+                    frontier_capacity=capacity)), mesh_dm)
+            st.ensure(4)
+            for a, b in zip(ref_bf.batches, st.batches):
+                assert a.batch_index == b.batch_index
+                np.testing.assert_array_equal(np.asarray(a.visited),
+                                              np.asarray(b.visited))
+            return np.asarray(st.sampler.last_gather_words).sum(0), st
+        gw_dense, _ = bf_store(mesh_bf, 0, frontier="dense")
+        gw_bf, st_bf = bf_store(mesh_bf, 64)
+        levels = np.flatnonzero(gw_dense)
+        assert levels.size, "traversal must record per-level gather traffic"
+        # never worse than dense, strictly better wherever it engaged
+        assert (gw_bf[levels] <= gw_dense[levels]).all(), (gw_bf, gw_dense)
+        assert (gw_bf[levels] < gw_dense[levels]).any(), (gw_bf, gw_dense)
+        # capacity-overflow fallback: 1 packed word per shard — the dense
+        # early levels MUST take the flat-gather leg (identical traffic)
+        # and the bits must not care which leg any level took
+        gw_ov, _ = bf_store(mesh_bf, 1)
+        assert (gw_ov[levels] == gw_dense[levels]).any(), (gw_ov, gw_dense)
+        assert (gw_ov[levels] >= gw_bf[levels]).all(), (gw_ov, gw_bf)
+        # non-power-of-two model axis
+        gw_m3, st_m3 = bf_store(mesh_m3, 64)
+        s_m3, sig_m3 = DistributedQueryEngine(st_m3).top_k(4)
+        s_bf, sig_bf = QueryEngine(ref_bf).top_k(4)
+        np.testing.assert_array_equal(s_m3, s_bf)
+        assert sig_m3 == sig_bf
+    print("OK butterfly_exchange")
+
+    # ---- model-sharded pool rows: V/M per device, elastic across D×M ------
+    # On a mesh carrying a size-M model axis the pool's VERTEX rows shard
+    # too: the stack is (Bp, Vp, W) with each device holding only its
+    # (slot block × V/M row slice), the query engine merges with one psum
+    # over data and one over model, and the answers stay bit-identical to
+    # the 1-device engine.  Host batches stay full-V, so a snapshot saved
+    # under 2×4 restores onto 4×2 or a model-free 8-shard mesh unchanged.
+    mesh_rs = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    rs = ShardedSketchStore(g, cfg, mesh_rs)
+    rs.ensure(8)
+    assert rs.row_shards == 4 and rs.padded_vertices % 4 == 0
+    stack = rs.visited_stack()
+    assert stack.shape[:2] == (rs.padded_batches, rs.padded_vertices)
+    blk = next(iter(stack.addressable_shards)).data
+    assert blk.shape[1] == rs.padded_vertices // 4      # V/M rows/device
+    er = DistributedQueryEngine(rs)
+    s_rs, sig_rs = er.top_k(4)
+    np.testing.assert_array_equal(s1, s_rs)
+    assert sig1 == sig_rs
+    np.testing.assert_array_equal(e1.sigma(sets), er.sigma(sets))
+    np.testing.assert_array_equal(e1.marginal_gains(excl),
+                                  er.marginal_gains(excl))
+    np.testing.assert_array_equal(e1.best_extension(excl, 2),
+                                  er.best_extension(excl, 2))
+    # in-place refresh keeps the 2-D placement consistent (vertex-padded
+    # donated scatter), pad rows stay zero
+    rs.refresh(0.5)
+    after = np.asarray(rs.visited_stack())
+    np.testing.assert_array_equal(
+        after[:len(rs.batches), :g.num_vertices],
+        np.stack([np.asarray(b.visited) for b in rs.batches]))
+    assert not after[:, g.num_vertices:].any()
+    with tempfile.TemporaryDirectory() as d_:
+        rs.save(d_)
+        extra = ShardedSketchStore.saved_layout(d_)
+        assert extra["row_layout"]["shards"] == 4
+        assert extra["row_layout"]["padded_vertices"] == rs.padded_vertices
+        want = DistributedQueryEngine(rs).top_k(4)
+        mesh_42 = Mesh(np.array(jax.devices()).reshape(4, 2),
+                       ("data", "model"))
+        for new_mesh, m_new in ((mesh_42, 2), (mesh8, 1)):
+            r_new = ShardedSketchStore.restore(d_, g, cfg, new_mesh)
+            assert r_new.row_shards == m_new
+            got = DistributedQueryEngine(r_new).top_k(4)
+            np.testing.assert_array_equal(want[0], got[0])
+            assert want[1] == got[1]
+    print("OK rowsharded_pool")
+
     # ---- async front-end: deadline flush, concurrency, refresh ------------
     deadline = 0.2
     engine = DistributedQueryEngine(sharded)

@@ -13,8 +13,9 @@ from repro.sampling import SamplerSpec
 from repro.serve.influence import PoolConfig, SketchStore
 from repro.serve.tier import EpochMixError, ServingTier, ShedError
 from repro.stream import (DirtySlotTracker, EdgeDelta, apply_delta,
-                          cold_rebuild_batches, incremental_refresh,
-                          plan_refresh, apply_plan, random_delta,
+                          cold_rebuild_batches, compact_graph, compact_store,
+                          incremental_refresh, plan_refresh, apply_plan,
+                          random_delta, tombstone_fraction,
                           touched_row_blocks)
 
 
@@ -324,6 +325,120 @@ def test_clean_slots_are_not_resampled(graph):
         np.testing.assert_array_equal(np.asarray(got.visited),
                                       np.asarray(want.visited))
         assert got.fused_edge_visits == want.fused_edge_visits
+
+
+# ------------------------------------- values-only frontier-index patch
+def test_patch_frontier_index_matches_fresh_build(graph):
+    from repro.core import sparse
+    g_rev0 = csr.transpose(graph)
+    fidx = sparse.build_frontier_index(g_rev0, tile_rows=64)
+    rng = np.random.default_rng(71)
+    delta = random_delta(graph, rng, num_deletes=6, num_inserts=0)
+    g_rev2, applied = apply_delta(g_rev0, delta.reversed())
+    blocks = touched_row_blocks(applied.touched_rows, 64)
+    assert len(blocks), "a live-edge delete must touch a row block"
+    patched = sparse.patch_frontier_index(fidx, g_rev2, blocks)
+    fresh = sparse.build_frontier_index(g_rev2, tile_rows=64)
+    for name in ("blk_src", "blk_dst", "blk_prob", "blk_eid", "blk_valid",
+                 "blk_rowblock"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(patched, name)),
+            np.asarray(getattr(fresh, name)), err_msg=name)
+    assert (patched.num_blocks, patched.edge_block, patched.tile_rows) == \
+        (fresh.num_blocks, fresh.edge_block, fresh.tile_rows)
+
+
+def test_values_only_delta_patches_sampler_in_place(graph):
+    store = _stream_store(graph, frontier="sparse", batches=3)
+    s0 = store.sampler
+    tracker = DirtySlotTracker.for_store(store)
+    rng = np.random.default_rng(73)
+    incremental_refresh(store, tracker,
+                        random_delta(store.graph, rng, num_deletes=3,
+                                     num_inserts=0))
+    assert store.sampler is s0, \
+        "a tombstone-only delta must patch the frontier index in place"
+    (sa, da), = _absent_pairs(store.graph, 1, seed=73)
+    incremental_refresh(store, tracker,
+                        EdgeDelta.inserts([sa], [da], [0.05]))
+    assert store.sampler is not s0, \
+        "an appending insert changes the edge layout → full rebuild"
+
+
+# ------------------------------------------------------------- compaction
+def test_compact_graph_drops_tombstones_bit_for_bit(graph):
+    rng = np.random.default_rng(81)
+    delta = random_delta(graph, rng, num_deletes=8, num_inserts=0)
+    g1, _ = apply_delta(graph, delta)
+    assert tombstone_fraction(graph) == 0.0
+    assert tombstone_fraction(g1) == pytest.approx(8 / g1.num_edges)
+    g2, g_rev2 = compact_graph(g1)
+    assert g2.num_edges == g1.num_edges - 8
+    assert tombstone_fraction(g2) == 0.0
+
+    def live_edges(g, sel):
+        e = g.num_edges
+        s, d, p = (np.asarray(a)[:e][sel]
+                   for a in (g.src, g.dst, g.prob))
+        order = np.lexsort((d, s))
+        return s[order], d[order], p[order]
+
+    e1 = g1.num_edges
+    live = np.asarray(g1.prob)[:e1] > 0
+    # Live weights carry over bit-for-bit (no union-merge round-trip).
+    for a, b in zip(live_edges(g1, live), live_edges(g2, slice(None))):
+        np.testing.assert_array_equal(a, b)
+    _assert_graph_identical(g_rev2, csr.transpose(g2))
+
+
+def test_compact_store_matches_cold_build_on_compacted_graph(graph):
+    store = _stream_store(graph, frontier="sparse", batches=4)
+    tracker = DirtySlotTracker.for_store(store)
+    rng = np.random.default_rng(83)
+    incremental_refresh(store, tracker,
+                        random_delta(store.graph, rng, num_deletes=6,
+                                     num_inserts=2))
+    frac = tombstone_fraction(store.graph)
+    assert frac > 0
+    reclaimed = compact_store(store)
+    assert reclaimed == pytest.approx(frac)
+    assert tombstone_fraction(store.graph) == 0.0
+    cold = cold_rebuild_batches(store)
+    for got, want in zip(store.batches, cold):
+        np.testing.assert_array_equal(np.asarray(got.visited),
+                                      np.asarray(want.visited))
+        assert got.fused_edge_visits == want.fused_edge_visits
+    np.testing.assert_array_equal(
+        np.asarray(store.visited_stack()),
+        np.stack([np.asarray(b.visited) for b in cold]))
+
+
+def test_tier_maybe_compact_policy_and_counter(graph):
+    store = _stream_store(graph, frontier="sparse", batches=3)
+    with ServingTier.build(store, replicas=2, quota_qps=None,
+                           default_deadline=0.05) as tier:
+        rng = np.random.default_rng(91)
+        tier.apply_delta("ops", random_delta(store.graph, rng,
+                                             num_deletes=5, num_inserts=0))
+        r0 = tier.group.replicas[0].store
+        frac = tombstone_fraction(r0.graph)
+        assert frac > 0
+        assert not tier.maybe_compact(threshold=0.5), \
+            "below threshold → no rebuild"
+        assert tier.maybe_compact(threshold=0.0)
+        assert tombstone_fraction(r0.graph) == 0.0
+        assert not tier.maybe_compact(threshold=0.0), \
+            "a freshly compacted graph has nothing to reclaim"
+        assert tier.group.consistent()
+        cold = cold_rebuild_batches(r0)
+        for got, want in zip(r0.batches, cold):
+            np.testing.assert_array_equal(np.asarray(got.visited),
+                                          np.asarray(want.visited))
+        snap = tier.snapshot()
+        assert snap["stream"]["compactions"] == 1
+        assert snap["stream"]["compacted_fraction"]["count"] == 1
+        # Queries keep flowing on the renumbered edge ids.
+        tier.gather([tier.submit_sigma("ops", [3, 17, 29])])
 
 
 # ------------------------------------------------- version + persistence
