@@ -14,6 +14,15 @@ Two sweeps over a sketch-pool build on a forced 8-device CPU host mesh
   graph (per-level frontier all-gathers on forced host devices are
   collective-bound, so the big graph would measure the CPU's psum, not
   the build mechanics), with its dense-backend reference alongside.
+* ``kernel_interpret`` — the Pallas-kernel cells: single-device
+  ``kernel`` backend rows and ``graph_parallel_kernel`` rows (the
+  ``graph_parallel`` backend with ``REPRO_GP_KERNEL=1``, i.e. each
+  shard's tile expansion through the kernels).  On CPU CI the kernels
+  run in **interpret mode**, which emulates the grid tile-by-tile — the
+  timings record the mechanics (and the bit-identity assertion versus
+  the dense reference), not accelerator throughput, so this sweep is
+  sized small enough for emulation.  On a real TPU/GPU host the same
+  rows record compiled-kernel numbers.
 
 Timing protocol (steady state, the serving regime): the cold ``ensure``
 + stack staging warm every program, then
@@ -45,6 +54,13 @@ level.  Dense-frontier rows record the flat all-gather's
 log(M) pairwise exchange where the compacted frontier fits
 (`gather_capacity_words`) and the dense fallback where it doesn't —
 the words saved per collapsed tail level, measured not claimed.
+
+``active_grid_frac`` is the tile-backend analogue: for ``kernel`` (and
+``tiled``) rows, the last sampled batch's kernel grid steps over the
+dense grid's ``levels · num_tiles`` — exactly 1.0 under
+``frontier="dense"``, strictly below 1.0 when the sparse frontier
+compacts the grid to the active source tiles (-1 where the backend does
+not run a tile grid).
 
 Runs in a **subprocess** so the forced device count never leaks into the
 parent.  Emits the standard ``BENCH_<name>.json`` shape.
@@ -84,8 +100,10 @@ def _mean_active_tile_frac(g, diffusion: str, colors: int, tile: int,
 
 
 def _worker(args: dict) -> None:
-    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                               f" --xla_force_host_platform_device_count={_DEVICES}").strip()
+    # One-stop accelerator config: latency-hiding XLA flags (GPU) plus the
+    # forced host-device shim (CPU CI) — before jax's backend materializes.
+    from repro.launch import accel
+    accel.configure(host_devices=_DEVICES)
     import jax
     import numpy as np
     from jax.sharding import Mesh
@@ -100,18 +118,31 @@ def _worker(args: dict) -> None:
         # and bit-identity needs one shared edge list across backends.
         g = csr.dedupe(generators.powerlaw_cluster(
             sweep["n"], sweep["deg"], prob=tuple(sweep["prob"]), seed=11))
-        cells = ([("dense", (1, 1))]
-                 + [("data_parallel", (s, 1))
-                    for s in sweep["shard_counts"]]
-                 + [("graph_parallel", tuple(dm))
-                    for dm in sweep["gp_mesh_shapes"]])
+        # (row label, SamplerSpec backend, mesh shape, REPRO_GP_KERNEL):
+        # graph_parallel_kernel is the same backend as graph_parallel with
+        # the per-shard Pallas kernel leg armed via the env knob.
+        cells = [("dense", "dense", (1, 1), False)]
+        if sweep.get("kernel_cells"):
+            cells.append(("kernel", "kernel", (1, 1), False))
+        cells += [("data_parallel", "data_parallel", (s, 1), False)
+                  for s in sweep["shard_counts"]]
+        for dm in sweep["gp_mesh_shapes"]:
+            cells.append(("graph_parallel", "graph_parallel",
+                          tuple(dm), False))
+            if sweep.get("gp_kernel"):
+                cells.append(("graph_parallel_kernel", "graph_parallel",
+                              tuple(dm), True))
 
         for diffusion in sweep["diffusions"]:
             tile_frac = _mean_active_tile_frac(
                 g, diffusion, sweep["colors"], sweep["tile"], 7)
             ref_store = None
-            for backend, (d, m) in cells:
+            for label, backend, (d, m), gp_kernel in cells:
                 for frontier in sweep["frontiers"]:
+                    if gp_kernel:
+                        os.environ["REPRO_GP_KERNEL"] = "1"
+                    else:
+                        os.environ.pop("REPRO_GP_KERNEL", None)
                     spec = sampling.SamplerSpec(
                         diffusion=diffusion, backend=backend,
                         num_colors=sweep["colors"], master_seed=7,
@@ -165,10 +196,18 @@ def _worker(args: dict) -> None:
                         gw_levels = [int(x) for x in lv[:last]]
                     else:
                         gw_levels = []
+                    # Kernel/tiled rows: last batch's grid steps over the
+                    # dense grid (1.0 dense frontier, < 1.0 sparse).
+                    smp = store.sampler
+                    agf = -1.0
+                    if getattr(smp, "last_levels", 0) and \
+                            hasattr(smp, "last_grid_steps"):
+                        agf = (smp.last_grid_steps
+                               / (smp.last_levels * smp.tg_rev.num_tiles))
                     row = {
                         "sweep": sweep["name"],
                         "diffusion": diffusion,
-                        "backend": backend,
+                        "backend": label,
                         "frontier": frontier,
                         "mesh": f"{d}x{m}",
                         "shards": getattr(store, "num_shards", 1),
@@ -181,6 +220,7 @@ def _worker(args: dict) -> None:
                         "fused_edge_visits": (sum(visits)
                                               if min(visits) >= 0 else -1),
                         "active_tile_frac": round(tile_frac, 4),
+                        "active_grid_frac": round(agf, 4),
                         "visited_rows_device": vis_rows,
                         "pool_mib_device": round(pool_mib, 3),
                         "gather_words_level": gw_levels,
@@ -208,6 +248,15 @@ def standard_sweeps(low_n=6000, gp_n=1200, batches=16) -> list[dict]:
              colors=64, tile=64, batches=max(batches // 2, 8),
              diffusions=["ic", "lt"], frontiers=["dense", "sparse"],
              shard_counts=[], gp_mesh_shapes=[(2, 4)]),
+        # Sized for CPU interpret-mode kernel emulation (~170 tiles): the
+        # kernel rows record mechanics + bit-identity there, compiled
+        # numbers on a real accelerator.
+        dict(name="kernel_interpret", n=max(gp_n * 2 // 3, 400), deg=6.0,
+             prob=(0.0, 0.1), colors=64, tile=64,
+             batches=max(batches // 2, 8),
+             diffusions=["ic", "lt"], frontiers=["dense", "sparse"],
+             shard_counts=[], gp_mesh_shapes=[(2, 2)],
+             kernel_cells=True, gp_kernel=True),
     ]
 
 
@@ -234,16 +283,16 @@ def run(sweeps=None, out=print, json_path="BENCH_pool_build.json"):
 
     out("# pool build: sweep,diffusion,backend,frontier,mesh,build_s,"
         "batches_per_s,refresh_s,fused_edge_visits,active_tile_frac,"
-        "visited_rows_device,pool_mib_device,gather_words")
+        "active_grid_frac,visited_rows_device,pool_mib_device,gather_words")
     for r in rows:
         out(",".join(str(r[k]) for k in
                      ("sweep", "diffusion", "backend", "frontier", "mesh",
                       "build_s", "batches_per_s", "refresh_s",
                       "fused_edge_visits", "active_tile_frac",
-                      "visited_rows_device", "pool_mib_device",
-                      "gather_words")))
+                      "active_grid_frac", "visited_rows_device",
+                      "pool_mib_device", "gather_words")))
 
-    record = {"bench": "pool_build", "schema": 3,
+    record = {"bench": "pool_build", "schema": 4,
               "unix_time": int(time.time()), "env": bench_env,
               "params": params, "rows": rows}
     if json_path:

@@ -80,12 +80,30 @@ stream_smoke() {
         --diffusion lt --frontier sparse
 }
 
+# Pallas-kernel interpret smoke: on the CPU backend every kernel runs in
+# interpret mode (kernels.ops._interpret), so CI exercises the REAL kernel
+# code paths — the pytest suite above holds the unit bit-identity
+# (test_kernels.py / test_sampling.py), check_work_counters.py gates the
+# sparse kernel grid, and this runs the serving lifecycle end to end on
+# the kernel backend (IC dense-frontier, LT sparse-frontier) plus the
+# graph-parallel kernel leg (REPRO_GP_KERNEL=1 routes each shard's tile
+# expansion through the kernels on a 2-D mesh).
+kernel_interpret_smoke() {
+    python -m repro.launch.serve_influence --smoke \
+        --sampler-backend kernel
+    python -m repro.launch.serve_influence --smoke \
+        --sampler-backend kernel --diffusion lt --frontier sparse
+    REPRO_GP_KERNEL=1 python -m repro.launch.serve_influence --smoke \
+        --mesh 2x2 --sampler-backend graph_parallel
+}
+
 if python -m pip install -e . ; then
     python -m pytest -x -q
     graph_parallel_smoke
     work_counter_guard
     tier_smoke
     stream_smoke
+    kernel_interpret_smoke
 else
     echo "[ci] pip install failed; running from source tree" >&2
     export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -94,4 +112,5 @@ else
     work_counter_guard
     tier_smoke
     stream_smoke
+    kernel_interpret_smoke
 fi

@@ -84,7 +84,7 @@ def sample_batch(g_rev: csr.Graph, num_colors: int, master_seed: int,
                                   max_levels=max_levels)
         return RRRBatch(visited, np.asarray(roots), batch_index, -1, -1)
     if tg_rev is not None:
-        visited, _ = tiled_traversal.run_fused_tiled(
+        visited, _, _ = tiled_traversal.run_fused_tiled(
             tg_rev, roots, num_colors, seed, max_levels=max_levels,
             use_kernel=use_kernel)
         return RRRBatch(visited, np.asarray(roots), batch_index, -1, -1)

@@ -232,8 +232,10 @@ def _sparse_step(fidx: FrontierIndex, frontier, visited, level, seed,
                  ladder: tuple[int, ...], u=None):
     """One compacted expansion level.  ``visited`` must already include the
     current frontier (level-sync semantics).  Returns
-    ``(next_frontier, fused_visits, unfused_visits)`` — the counters are
-    bit-equal to the dense sweep's (`fused_step` info dict).
+    ``(next_frontier, fused_visits, unfused_visits, grid_steps)`` — the
+    visit counters are bit-equal to the dense sweep's (`fused_step` info
+    dict); ``grid_steps`` is the capacity rung that ran (the compacted
+    work-list length the level paid for).
 
     ``u = None`` selects the IC per-(edge, color, level) Bernoulli gate;
     an ``(V, W·32)`` LT uniform table (`kernels.ref.lt_selection_uniforms`)
@@ -272,7 +274,7 @@ def _sparse_step(fidx: FrontierIndex, frontier, visited, level, seed,
             fused = jnp.sum(jnp.where(valid, (active_src > 0)
                                       .astype(jnp.int32), 0))
             unfused = jnp.sum(jnp.where(valid, active_src, 0))
-            return nf, fused, unfused
+            return nf, fused, unfused, jnp.int32(cap)
         return run
 
     return cond_ladder(count, ladder, step_at)
@@ -292,7 +294,7 @@ def run_fused_sparse(fidx: FrontierIndex, starts, num_colors: int, seed,
     zeros_i = jnp.zeros((max_levels,), jnp.int32)
     zeros_f = jnp.zeros((max_levels,), jnp.float32)
     stats = TraversalStats(jnp.int32(0), zeros_i, zeros_i, zeros_i, zeros_i,
-                           zeros_f, zeros_f)
+                           zeros_f, zeros_f, zeros_i)
 
     def cond(carry):
         frontier, _, level, _ = carry
@@ -305,7 +307,7 @@ def run_fused_sparse(fidx: FrontierIndex, starts, num_colors: int, seed,
         fr_vertices = jnp.sum((per_row > 0).astype(jnp.int32))
         fr_colors = jnp.sum(per_row)
         visited = visited | frontier                     # Listing 1 line 8
-        nf, fused, unfused = _sparse_step(
+        nf, fused, unfused, gs = _sparse_step(
             fidx, frontier, visited, level.astype(jnp.uint32),
             jnp.asarray(seed, jnp.uint32), ladder)
         occ = jnp.where(fr_vertices > 0,
@@ -322,6 +324,7 @@ def run_fused_sparse(fidx: FrontierIndex, starts, num_colors: int, seed,
             frontier_colors=stats.frontier_colors.at[level].set(fr_colors),
             occupancy_num=stats.occupancy_num.at[level].set(occ),
             active_tile_frac=stats.active_tile_frac.at[level].set(tile_frac),
+            grid_steps=stats.grid_steps.at[level].set(gs),
         )
         return nf, visited, level + 1, stats
 
@@ -361,8 +364,8 @@ def run_fused_lt_sparse(fidx: FrontierIndex, starts, num_colors: int, seed,
     def body(carry):
         fr, vis, level = carry
         vis = vis | fr
-        nf, _, _ = _sparse_step(fidx, fr, vis, level.astype(jnp.uint32),
-                                seed, ladder, u=u)
+        nf, _, _, _ = _sparse_step(fidx, fr, vis, level.astype(jnp.uint32),
+                                   seed, ladder, u=u)
         return nf, vis, level + 1
 
     fr, vis, _ = jax.lax.while_loop(cond, body,
@@ -432,7 +435,7 @@ def profile_traversal(fidx: FrontierIndex, starts, num_colors: int, seed,
         n_blk = int(act[rowblocks].sum())
         bucket = next(k for k in ladder if n_blk <= k)
         vis = vis | fr
-        fr, fused, unfused = step(fr, vis, jnp.uint32(level), bucket)
+        fr, fused, unfused, _ = step(fr, vis, jnp.uint32(level), bucket)
         out.append(dict(
             level=level,
             active_row_blocks=int(act.sum()),

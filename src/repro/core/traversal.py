@@ -49,6 +49,11 @@ class TraversalStats:
     occupancy_num: jnp.ndarray         # (max_levels,) f32  Σ popcount / active
     # Fig. 9 analogue: fraction of 128-row tiles containing an active vertex.
     active_tile_frac: jnp.ndarray      # (max_levels,) f32
+    # Kernel-grid work: grid steps launched this level.  Sparse-frontier
+    # paths record the capacity rung that ran (compacted tile count); the
+    # dense tiled grid records num_tiles; non-gridded (CSR edge-centric)
+    # paths record 0 — the counter prices the *grid*, not edge work.
+    grid_steps: jnp.ndarray            # (max_levels,) int32
 
 
 @jax.tree_util.register_dataclass
@@ -136,7 +141,7 @@ def run_fused(g: Graph, starts: jnp.ndarray, num_colors: int,
     zeros_i = jnp.zeros((max_levels,), jnp.int32)
     zeros_f = jnp.zeros((max_levels,), jnp.float32)
     stats = TraversalStats(jnp.int32(0), zeros_i, zeros_i, zeros_i, zeros_i,
-                           zeros_f, zeros_f)
+                           zeros_f, zeros_f, zeros_i)
 
     def cond(carry):
         frontier, _, level, _ = carry
@@ -162,6 +167,7 @@ def run_fused(g: Graph, starts: jnp.ndarray, num_colors: int,
                 info["frontier_colors"]),
             occupancy_num=stats.occupancy_num.at[level].set(occ),
             active_tile_frac=stats.active_tile_frac.at[level].set(tile_frac),
+            grid_steps=stats.grid_steps,          # CSR path: not gridded
         )
         return nf, nv, level + 1, stats
 
@@ -224,7 +230,7 @@ def run_single_color(g: Graph, start: jnp.ndarray, color_id: int,
     zeros_i = jnp.zeros((max_levels,), jnp.int32)
     zeros_f = jnp.zeros((max_levels,), jnp.float32)
     stats = TraversalStats(jnp.int32(0), zeros_i, zeros_i, zeros_i, zeros_i,
-                           zeros_f, zeros_f)
+                           zeros_f, zeros_f, zeros_i)
 
     def cond(carry):
         frontier, _, level, _ = carry
@@ -252,6 +258,7 @@ def run_single_color(g: Graph, start: jnp.ndarray, color_id: int,
             frontier_colors=stats.frontier_colors,
             occupancy_num=stats.occupancy_num,
             active_tile_frac=stats.active_tile_frac,
+            grid_steps=stats.grid_steps,
         )
         return nf, visited, level + 1, stats
 

@@ -310,25 +310,49 @@ def _butterfly_exchange(fr, axis: str, num_shards: int, n: int, k: int):
 
 
 def _local_expand(ptg_local, diffusion: str, cb_local, seed, dst_block_base,
-                  num_colors: int):
+                  num_colors: int, use_kernel: bool = False,
+                  interpret: bool = True):
     """Per-shard expansion closure over the shard's (leading-dim-1) tile
     stacks: IC draws per-(edge, color, level) Bernoullis keyed by CSR edge
     id; LT derives the fixed live-edge selection from GLOBAL destination
     vertex ids (``dst_block_base`` rebases the shard's local blocks), with
     the level-independent uniform table built ONCE here — before the level
-    loop — and reused by every level's expansion."""
+    loop — and reused by every level's expansion.
+
+    ``use_kernel=True`` runs each shard's partitioned tile stack through
+    the Pallas tile kernels (`fused_expand` / `lt_select_expand`) instead
+    of the jnp oracles — the tiles are dst-sorted within a shard with
+    ``first_of_dst`` rebased per shard, and the kernels already accept a
+    global frontier with shard-local visited rows, so the kernel grid is
+    exactly the single-device one on the local stack (padding tiles are
+    prob-0 and share the last real tile's dst block: inert).  Bits are
+    identical either way."""
     if diffusion == "lt":
+        from repro.kernels import lt_select_expand as lse
         rows = ptg_local.blocks_per_shard * ptg_local.tile_size
         u = kref.lt_selection_uniforms(
             seed, rows, num_colors,
             row_base=dst_block_base * ptg_local.tile_size)
 
         def expand(fr_global, vis_local, level):
+            if use_kernel:
+                return lse.lt_select_expand(
+                    ptg_local.prob[0], cb_local[0], ptg_local.tile_src[0],
+                    ptg_local.tile_dst[0], ptg_local.first_of_dst[0],
+                    fr_global, vis_local, u, interpret=interpret)
             return kref.lt_select_expand_ref(
                 ptg_local.prob[0], cb_local[0], ptg_local.tile_src[0],
                 ptg_local.tile_dst[0], fr_global, vis_local, u)
     else:
+        from repro.kernels import fused_expand as fe
+
         def expand(fr_global, vis_local, level):
+            if use_kernel:
+                return fe.fused_expand(
+                    ptg_local.prob[0], ptg_local.edge_id[0],
+                    ptg_local.tile_src[0], ptg_local.tile_dst[0],
+                    ptg_local.first_of_dst[0], fr_global, vis_local,
+                    seed, level, interpret=interpret)
             return kref.fused_expand_ref(
                 ptg_local.prob[0], ptg_local.edge_id[0],
                 ptg_local.tile_src[0], ptg_local.tile_dst[0],
@@ -383,7 +407,8 @@ def graph_parallel_block(ptg: part_lib.PartitionedTiledGraph, mesh: Mesh, *,
                          data_axis: str = "data", model_axis: str = "model",
                          num_colors: int, max_levels: int = 64,
                          diffusion: str = "ic", frontier: str = "dense",
-                         gather_capacity: int = 0):
+                         gather_capacity: int = 0, use_kernel: bool = False,
+                         interpret: bool = True):
     """Build (or fetch the cached) 2-D (data × model) fused-BPT block program.
 
     The composition the `repro.sampling` ``graph_parallel`` backend runs:
@@ -419,9 +444,15 @@ def graph_parallel_block(ptg: part_lib.PartitionedTiledGraph, mesh: Mesh, *,
     (word_idx, word) pairs whenever the pmax'd active-word count fits
     ``gather_capacity`` words per shard, `gather_capacity_words` default)
     — same bits, less model-axis traffic on the collapsed late levels.
+
+    ``use_kernel=True`` swaps each shard's local tile expansion from the
+    jnp oracle to the Pallas kernels (`_local_expand`'s kernel leg);
+    ``interpret`` is forwarded to them (True = emulate off-TPU).  Both are
+    part of the compile cache key.
     """
     key = (mesh, data_axis, model_axis, num_colors, max_levels, diffusion,
-           frontier, gather_capacity, ptg.num_vertices, ptg.num_edges,
+           frontier, gather_capacity, use_kernel, interpret,
+           ptg.num_vertices, ptg.num_edges,
            ptg.tile_size, ptg.num_shards, ptg.blocks_per_shard)
     fn = _GP_BLOCK_FNS.get(key)
     if fn is None:
@@ -429,14 +460,16 @@ def graph_parallel_block(ptg: part_lib.PartitionedTiledGraph, mesh: Mesh, *,
             ptg, mesh, data_axis=data_axis, model_axis=model_axis,
             num_colors=num_colors, max_levels=max_levels,
             diffusion=diffusion, frontier=frontier,
-            gather_capacity=gather_capacity)
+            gather_capacity=gather_capacity, use_kernel=use_kernel,
+            interpret=interpret)
         _GP_BLOCK_FNS[key] = fn
     return fn
 
 
 def _build_graph_parallel_block(ptg, mesh, *, data_axis, model_axis,
                                 num_colors, max_levels, diffusion, frontier,
-                                gather_capacity):
+                                gather_capacity, use_kernel=False,
+                                interpret=True):
     from repro.distributed.compat import shard_map
 
     v, vp = ptg.num_vertices, ptg.padded_vertices
@@ -457,7 +490,8 @@ def _build_graph_parallel_block(ptg, mesh, *, data_axis, model_axis,
             fr = tiles.pad_mask_rows(init_frontier(v, num_colors, starts), vp)
             fr_local = jax.lax.dynamic_slice_in_dim(fr, base * tile, rows)
             expand = _local_expand(ptg_local, diffusion, cb_local, seed,
-                                   base, num_colors)
+                                   base, num_colors, use_kernel=use_kernel,
+                                   interpret=interpret)
             vis, _, gw = _frontier_gather_loop(
                 expand, fr_local, max_levels, model_axis,
                 num_shards=num_shards, sparse_words=sparse_words,

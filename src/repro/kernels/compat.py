@@ -8,3 +8,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = (getattr(pltpu, "CompilerParams", None)
                   or pltpu.TPUCompilerParams)
+
+
+def expand_grid_params():
+    """Compiler params shared by every tile-expansion kernel (fused_expand,
+    fused_expand_q, lt_select_expand): a sequential ("arbitrary") grid, so
+    the revisiting accumulation over dst-sorted tiles is legal.  One
+    constructor, so the next jax params rename is a one-line change here
+    (flash_attention declares its own — its semantics differ)."""
+    return CompilerParams(dimension_semantics=("arbitrary",))

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.compat import CompilerParams as _CompilerParams
+from repro.kernels.compat import expand_grid_params
 
 from repro.core import rng
 
@@ -101,8 +101,7 @@ def fused_expand(tg_prob, tg_eid, tile_src, tile_dst, first_of_dst,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Vp, W), jnp.uint32),
         interpret=interpret,
-        compiler_params=_CompilerParams(
-            dimension_semantics=("arbitrary",)),   # sequential: accumulation
+        compiler_params=expand_grid_params(),      # sequential: accumulation
     )(tile_src, tile_dst, first_of_dst, scalars,
       tg_prob, tg_eid, frontier, visited)
 

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.compat import CompilerParams as _CompilerParams
+from repro.kernels.compat import expand_grid_params
 
 from repro.core import rng
 
@@ -112,10 +112,79 @@ def fused_expand_q(q8_tiles, tile_src, tile_dst, first_of_dst,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Vp, W), jnp.uint32),
         interpret=interpret,
-        compiler_params=_CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        compiler_params=expand_grid_params(),
     )(tile_src, tile_dst, first_of_dst, scalars,
       q8_tiles, frontier, visited)
+    covered = jnp.zeros((n_blocks,), jnp.uint32).at[tile_dst].set(1)
+    return out * jnp.repeat(covered, T)[:, None]
+
+
+def _expand_q_gathered_kernel(ids_ref, tile_src_ref, tile_dst_ref,
+                              first_ref, scalar_ref, q_ref, frontier_ref,
+                              visited_ref, out_ref,
+                              *, num_words: int, tile_size: int):
+    t = pl.program_id(0)
+
+    @pl.when(first_ref[t] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    seed = scalar_ref[0]
+    level = scalar_ref[1]
+    q8 = q_ref[0]
+    fr = frontier_ref[...]
+    vis = visited_ref[...]
+    T = tile_size
+    row = jax.lax.broadcasted_iota(jnp.uint32, (T, T), 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, (T, T), 1)
+    # RNG counters derive from the ORIGINAL tile id (prefetched), not the
+    # grid position — the compacted grid must draw the dense grid's bits.
+    cell = (ids_ref[t].astype(jnp.uint32) * jnp.uint32(T * T)
+            + row * jnp.uint32(T) + col)
+
+    for w in range(num_words):
+        rand_w = _bern_word_q(seed, level, cell, jnp.uint32(w), q8)
+        x = fr[:, w][:, None] & rand_w
+        n = T
+        while n > 1:
+            n //= 2
+            x = x[:n] | x[n:]
+        out_ref[:, w] |= x[0] & ~vis[:, w]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_expand_q_gathered(q8_gathered, tile_ids, tile_src, tile_dst,
+                            first_of_dst, frontier, visited, seed, level,
+                            *, interpret=True):
+    """Sparse-grid variant of `fused_expand_q`: the grid iterates a
+    compacted (dst-sorted, null-padded) tile list; ``tile_ids`` carries
+    each slot's ORIGINAL tile id so the position-derived RNG counters
+    match the dense grid bit for bit."""
+    nt, T, _ = q8_gathered.shape
+    _, W = frontier.shape
+    Vp = visited.shape[0]
+    n_blocks = Vp // T
+    scalars = jnp.asarray([seed, level], jnp.uint32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1, T, T), lambda t, ids, ts, td, fi, sc: (t, 0, 0)),
+            pl.BlockSpec((T, W), lambda t, ids, ts, td, fi, sc: (ts[t], 0)),
+            pl.BlockSpec((T, W), lambda t, ids, ts, td, fi, sc: (td[t], 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (T, W), lambda t, ids, ts, td, fi, sc: (td[t], 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_expand_q_gathered_kernel, num_words=W,
+                          tile_size=T),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Vp, W), jnp.uint32),
+        interpret=interpret,
+        compiler_params=expand_grid_params(),
+    )(tile_ids, tile_src, tile_dst, first_of_dst, scalars,
+      q8_gathered, frontier, visited)
     covered = jnp.zeros((n_blocks,), jnp.uint32).at[tile_dst].set(1)
     return out * jnp.repeat(covered, T)[:, None]
 

@@ -117,10 +117,15 @@ def _dot_flops(line: str, result_type: str, types: dict[str, str]) -> float:
     result_elems = 1
     for d in dims[0]:
         result_elems *= d
-    m = re.search(r"dot\(%?([\w\.\-]+),", line)
+    # First operand, tolerating commas inside shape brackets / layout
+    # braces: some XLA builds (CPU notably) print operand TYPES inline —
+    # ``dot(f32[64,32]{1,0} %a, ...)`` — others just ``dot(%a, ...)``.
+    m = re.search(r"dot\(((?:\[[^\]]*\]|\{[^\}]*\}|[^,()])+),", line)
     lhs_shape = None
-    if m and m.group(1) in types:
-        shapes = _shape_dims(types[m.group(1)])
+    if m:
+        lhs = m.group(1).strip()
+        shapes = (_shape_dims(lhs) if "[" in lhs
+                  else _shape_dims(types.get(lhs.lstrip("%"), "")))
         lhs_shape = shapes[0] if shapes else None
     cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
     contraction = 1
@@ -212,10 +217,17 @@ class HloCost:
         b = float(_shape_bytes(rtype))
         m = re.search(re.escape(op) + r"\(([^)]*)\)", line)
         if m:
-            for arg in m.group(1).split(","):
-                arg = arg.strip().lstrip("%")
-                if arg in types:
-                    b += _shape_bytes(types[arg])
+            args = m.group(1)
+            if "[" in args:
+                # Inline operand types (CPU XLA text): the shapes are right
+                # in the argument list — sum them directly (comma-splitting
+                # would cut ``f32[64,32]`` apart).
+                b += _shape_bytes(args)
+            else:
+                for arg in args.split(","):
+                    arg = arg.strip().lstrip("%")
+                    if arg in types:
+                        b += _shape_bytes(types[arg])
         return b
 
     def analyze(self) -> dict:

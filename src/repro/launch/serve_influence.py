@@ -64,18 +64,14 @@ def _force_cpu_host_devices(n: int) -> None:
     """``--smoke --mesh``: run the distributed path on ``n`` forced host
     CPU devices (the multi-device test-suite trick), whatever the host has.
 
-    Must run before jax initializes its backend (imports above don't — the
+    Delegates to `repro.launch.accel` (the one owner of XLA-env mutation);
+    must run before jax initializes its backend (imports above don't — the
     backend materializes on the first device query/op).  An explicit
     accelerator request (``JAX_PLATFORMS=tpu``/``cuda``...) opts out;
     production runs don't pass ``--smoke`` and use real devices.
     """
-    if n <= 1 or os.environ.get("JAX_PLATFORMS", "cpu") not in ("", "cpu"):
-        return
-    os.environ["JAX_PLATFORMS"] = "cpu"
-    flags = os.environ.get("XLA_FLAGS", "")
-    if "xla_force_host_platform_device_count" not in flags:
-        os.environ["XLA_FLAGS"] = (
-            flags + f" --xla_force_host_platform_device_count={n}").strip()
+    from repro.launch import accel
+    accel.set_host_device_count(n)
 
 
 def build_graph(args):
@@ -694,6 +690,12 @@ def main():
     ap.add_argument("--ckpt-dir", default=None,
                     help="pool snapshot directory (default: temp dir)")
     args = ap.parse_args()
+
+    # Standard accelerator config (GPU latency-hiding flags; inert on
+    # CPU/TPU) before any jax backend materializes — the smoke paths below
+    # additionally force host devices through the same module.
+    from repro.launch import accel
+    accel.configure()
 
     if args.stream_smoke:
         shape = _parse_mesh(args.mesh) if args.mesh else None

@@ -18,8 +18,9 @@ Backends:
 * ``tiled``          — block-sparse tile expansion, pure-jnp oracle
                        (`core.tiled_traversal.run_fused_tiled`; LT via
                        `run_fused_lt_tiled`).
-* ``kernel``         — same tile layout through the Pallas ``fused_expand``
-                       kernel.  IC only.
+* ``kernel``         — same tile layout through the Pallas kernels
+                       (``fused_expand`` for IC, ``lt_select_expand`` for
+                       LT).
 * ``data_parallel``  — batch *blocks* over a mesh axis via ``shard_map``:
                        each shard traverses its own contiguous slice of the
                        block with per-batch RNG streams, on its own device
@@ -40,6 +41,8 @@ LT diffusion: the facade owns live-edge weight normalization
 can hand any IC-weighted graph to an LT sampler.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -306,32 +309,31 @@ class TiledSampler(Sampler):
             from repro.core import sparse
             self._ladder = sparse.bucket_ladder(self.tg_rev.num_tiles,
                                                 spec.frontier_capacity)
+        # Grid-work observability (benchmarks' active_grid_frac column):
+        # per-sample totals from the last `sample()` call.
+        self.last_levels = 0
+        self.last_grid_steps = 0
 
     def sample(self, batch_index: int) -> rrr.RRRBatch:
         spec = self.spec
+        starts = self.batch_starts(batch_index)
+        seed = self.batch_seed(batch_index)
+        ladder = self._ladder if spec.frontier == "sparse" else None
+        use_kernel = (spec.backend == "kernel")
         if spec.diffusion == "lt":
-            starts = self.batch_starts(batch_index)
-            visited, _ = tiled_traversal.run_fused_lt_tiled(
+            visited, levels, gs = tiled_traversal.run_fused_lt_tiled(
                 self.tg_rev, self._cb_tiles, starts, spec.num_colors,
-                self.batch_seed(batch_index), max_levels=spec.max_iters,
-                frontier=spec.frontier,
-                ladder=self._ladder if spec.frontier == "sparse" else None)
-            return rrr.RRRBatch(visited, np.asarray(starts),
-                                int(batch_index), -1, -1)
-        if spec.frontier == "sparse":
-            starts = self.batch_starts(batch_index)
-            visited, _ = tiled_traversal.run_fused_tiled(
-                self.tg_rev, starts, spec.num_colors,
-                self.batch_seed(batch_index), max_levels=spec.max_iters,
-                use_kernel=(spec.backend == "kernel"), frontier="sparse",
-                ladder=self._ladder)
-            return rrr.RRRBatch(visited, np.asarray(starts),
-                                int(batch_index), -1, -1)
-        return rrr.sample_batch(
-            self.g_rev, self.spec.num_colors, self.spec.master_seed,
-            int(batch_index), sort_starts=self.spec.sort_starts,
-            max_levels=self.spec.max_iters, tg_rev=self.tg_rev,
-            use_kernel=(self.spec.backend == "kernel"))
+                seed, max_levels=spec.max_iters, use_kernel=use_kernel,
+                frontier=spec.frontier, ladder=ladder)
+        else:
+            visited, levels, gs = tiled_traversal.run_fused_tiled(
+                self.tg_rev, starts, spec.num_colors, seed,
+                max_levels=spec.max_iters, use_kernel=use_kernel,
+                frontier=spec.frontier, ladder=ladder)
+        self.last_levels = int(levels)
+        self.last_grid_steps = int(gs)
+        return rrr.RRRBatch(visited, np.asarray(starts),
+                            int(batch_index), -1, -1)
 
 
 class _BlockSampler(Sampler):
@@ -506,6 +508,17 @@ class DataParallelSampler(_BlockSampler):
         return make_sampler(g, self.spec, self.mesh, g_rev=g_rev)
 
 
+def _gp_use_kernel() -> bool:
+    """Env knob: ``REPRO_GP_KERNEL=1`` routes the graph_parallel backend's
+    per-shard tile expansion through the Pallas kernels instead of the jnp
+    oracle.  An env var rather than a `SamplerSpec` field because it does
+    not change a single output bit — it selects an execution engine for the
+    same partitioned layout, like ``interpret`` — so specs embedded in pool
+    manifests stay portable across machines with and without kernel
+    support."""
+    return os.environ.get("REPRO_GP_KERNEL", "0") == "1"
+
+
 class GraphParallelSampler(_BlockSampler):
     """Graph rows sharded over ``spec.model_axis``, batch blocks over
     ``spec.mesh_axis`` — the 2-D (data × model) composition for graphs
@@ -569,6 +582,7 @@ class GraphParallelSampler(_BlockSampler):
         # statics) — a dict hit after the first build, shared across
         # rebound samplers so streaming deltas never re-trace.
         from repro.distributed.traversal import graph_parallel_block
+        from repro.kernels import ops
         return graph_parallel_block(
             self.ptg, self.mesh, data_axis=self.data_axis,
             model_axis=self.model_axis,
@@ -576,7 +590,8 @@ class GraphParallelSampler(_BlockSampler):
             max_levels=self.spec.max_iters,
             diffusion=self.spec.diffusion,
             frontier=self.spec.frontier,
-            gather_capacity=self.spec.frontier_capacity)
+            gather_capacity=self.spec.frontier_capacity,
+            use_kernel=_gp_use_kernel(), interpret=ops._interpret())
 
     def _block(self, idx: list[int]):
         """(visited (B, Vp, W) sharded P(data, model), roots (B, C) numpy)

@@ -9,11 +9,13 @@ manifests.  The (diffusion × backend) support matrix:
     --------------------+------+------
     dense               |  ✓   |  ✓     CSR edge-centric sweep
     tiled               |  ✓   |  ✓     block-sparse tiles, jnp oracle
-    kernel              |  ✓   |  ✗     block-sparse tiles, Pallas kernel
+    kernel              |  ✓   |  ✓     block-sparse tiles, Pallas kernels
+                                        (`fused_expand` / `lt_select_expand`)
     data_parallel       |  ✓   |  ✓     shard_map batch blocks over a mesh
     graph_parallel      |  ✓   |  ✓     rows over ``model`` + batches over
                                         ``data`` on a 2-D mesh (frontier
-                                        all-gather per level)
+                                        all-gather per level; honors the
+                                        kernel leg via REPRO_GP_KERNEL=1)
 
 The RNG contract every backend honors: batch ``b`` under ``master_seed`` is
 a pure function of ``(graph, master_seed, b)`` — the same ``(seed, starts)``
@@ -29,13 +31,11 @@ DIFFUSIONS = ("ic", "lt")
 BACKENDS = ("dense", "tiled", "kernel", "data_parallel", "graph_parallel")
 FRONTIERS = ("dense", "sparse")
 
-# (diffusion, backend) pairs with an implementation behind them.  LT has no
-# Pallas kernel yet: its live-edge selection is per-(dst, color), not
-# per-(edge, color, level), so the IC expand kernel does not apply — the
-# tiled jnp oracle (`kernels.ref.lt_select_expand_ref`) covers LT instead.
+# (diffusion, backend) pairs with an implementation behind them — the
+# matrix is complete: LT's per-(dst, color) live-edge selection has its own
+# Pallas kernel (`kernels.lt_select_expand`) mirroring the IC expand kernel.
 _SUPPORTED = frozenset(
-    [("ic", b) for b in BACKENDS]
-    + [("lt", b) for b in BACKENDS if b != "kernel"])
+    (d, b) for d in DIFFUSIONS for b in BACKENDS)
 
 
 def supported(diffusion: str, backend: str) -> bool:

@@ -229,6 +229,45 @@ def main():
         assert sig_gp == sig_rf
     print("OK graph_parallel_pool")
 
+    # ---- graph_parallel KERNEL leg: Pallas tile kernels per shard ---------
+    # REPRO_GP_KERNEL=1 swaps every shard's local tile expansion from the
+    # jnp oracle to the Pallas kernels (`fused_expand` / `lt_select_expand`,
+    # interpret mode on these CPU host devices).  The pool must STILL be
+    # bit-identical to the 1-device dense pool, slot for slot, for both
+    # diffusions and both frontier modes — the kernel is an execution
+    # engine, never an answer change.
+    os.environ["REPRO_GP_KERNEL"] = "1"
+    try:
+        mesh_22 = jax.make_mesh((2, 2), ("data", "model"))
+        for diffusion in ("ic", "lt"):
+            ref_k = SketchStore(
+                g2, PoolConfig(max_batches=32,
+                               spec=sampling.SamplerSpec(diffusion=diffusion,
+                                                         num_colors=64,
+                                                         master_seed=3)))
+            ref_k.ensure(4)
+            for frontier in ("dense", "sparse"):
+                gpk = ShardedSketchStore(
+                    g2, PoolConfig(max_batches=32,
+                                   spec=sampling.SamplerSpec(
+                                       diffusion=diffusion,
+                                       backend="graph_parallel",
+                                       num_colors=64, master_seed=3,
+                                       tile_size=64, frontier=frontier)),
+                    mesh_22)
+                gpk.ensure(4)
+                for a, b in zip(ref_k.batches, gpk.batches):
+                    assert a.batch_index == b.batch_index
+                    np.testing.assert_array_equal(np.asarray(a.visited),
+                                                  np.asarray(b.visited))
+            s_k, sig_k = DistributedQueryEngine(gpk).top_k(4)
+            s_d, sig_d = QueryEngine(ref_k).top_k(4)
+            np.testing.assert_array_equal(s_k, s_d)
+            assert sig_k == sig_d
+    finally:
+        os.environ.pop("REPRO_GP_KERNEL", None)
+    print("OK graph_parallel_kernel")
+
     # ---- graph_parallel refresh + manifest layout + restore refusal -------
     # (continues with the ic (4 × 2) store from the last loop iteration)
     slots_gp = gp.refresh(0.5)

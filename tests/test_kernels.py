@@ -84,11 +84,60 @@ def test_tiled_traversal_equals_csr_traversal(use_kernel):
     starts = traversal.random_starts(jax.random.key(5), g.num_vertices, n_colors)
     res_csr = traversal.run_fused(g, starts, n_colors, jnp.uint32(21))
     tg = tiles.from_graph(g)
-    vis_tiled, levels = tiled_traversal.run_fused_tiled(
+    vis_tiled, levels, grid_steps = tiled_traversal.run_fused_tiled(
         tg, starts, n_colors, 21, use_kernel=use_kernel)
     np.testing.assert_array_equal(np.asarray(vis_tiled),
                                   np.asarray(res_csr.visited))
     assert int(levels) == int(res_csr.stats.levels_run)
+    assert int(grid_steps) == int(levels) * tg.num_tiles   # dense grid
+
+
+# ------------------------------------------------------------ lt_select_expand
+@pytest.mark.parametrize("tile_size", [32, 64, 128])
+@pytest.mark.parametrize("n_colors", [32, 64, 96])
+def test_lt_select_expand_kernel_matches_ref(tile_size, n_colors):
+    """One LT expansion level: Pallas kernel ≡ jnp oracle, bit for bit,
+    across tile sizes (incl. padded last blocks) and multi-word colors."""
+    from repro.core import lt
+    from repro.kernels import lt_select_expand as lse
+    g = lt.normalize_lt_weights(
+        _random_graph(300, 1500, (0.1, 0.9), seed=tile_size + n_colors))
+    tg = tiles.from_graph(g, tile_size=tile_size)
+    cb = tiles.edge_values_to_tiles(tg, lt.selection_cum_before(g))
+    starts = traversal.random_starts(jax.random.key(0), g.num_vertices,
+                                     n_colors)
+    fr = tiles.pad_mask_rows(
+        traversal.init_frontier(g.num_vertices, n_colors, starts),
+        tg.padded_vertices)
+    u = ref.lt_selection_uniforms(jnp.uint32(5), tg.padded_vertices,
+                                  n_colors)
+    out_ref = ref.lt_select_expand_ref(tg.prob, cb, tg.tile_src,
+                                       tg.tile_dst, fr, fr, u)
+    out_ker = lse.lt_select_expand(tg.prob, cb, tg.tile_src, tg.tile_dst,
+                                   tg.first_of_dst, fr, fr, u,
+                                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_ref), np.asarray(out_ker))
+
+
+@pytest.mark.parametrize("frontier", ["dense", "sparse"])
+def test_lt_tiled_kernel_traversal_equals_dense_lt(frontier):
+    """Full LT traversal through the Pallas kernel (dense grid and the
+    compacted sparse grid) ≡ `lt.run_fused_lt` on the CSR path; the sparse
+    grid must run no more steps than the dense grid."""
+    from repro.core import lt
+    g = lt.normalize_lt_weights(_random_graph(400, 2500, (0.1, 0.7),
+                                              seed=11))
+    starts = traversal.random_starts(jax.random.key(4), g.num_vertices, 64)
+    ref_vis = lt.run_fused_lt(g, starts, 64, jnp.uint32(9))
+    tg = tiles.from_graph(g)
+    cb = tiles.edge_values_to_tiles(tg, lt.selection_cum_before(g))
+    vis, levels, gs = tiled_traversal.run_fused_lt_tiled(
+        tg, cb, starts, 64, 9, use_kernel=True, frontier=frontier)
+    np.testing.assert_array_equal(np.asarray(vis), np.asarray(ref_vis))
+    if frontier == "dense":
+        assert int(gs) == int(levels) * tg.num_tiles
+    else:
+        assert 0 < int(gs) <= int(levels) * tg.num_tiles
 
 
 # -------------------------------------------------------------------- coverage
@@ -178,6 +227,42 @@ def test_fused_expand_q_kernel_matches_ref():
     r = feq.fused_expand_q_ref(q8, tg.tile_src, tg.tile_dst, fr, fr,
                                jnp.uint32(3), jnp.uint32(0))
     np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+
+
+def test_fused_expand_q_gathered_matches_dense_grid():
+    """The sparse-grid q kernel: a compacted (null-padded) tile list with
+    ORIGINAL tile ids prefetched draws the dense grid's position-derived
+    RNG bits — output ≡ the dense-grid kernel on the full stacks."""
+    from repro.core import sparse
+    from repro.kernels import fused_expand_q as feq
+    g = _random_graph(400, 2500, (0.1, 0.9), seed=6)
+    tg = tiles.from_graph(g)
+    q8 = feq.quantize_probs(tg.prob)
+    # Low-occupancy frontier: all 64 colors rooted on one vertex.
+    fr = tiles.pad_mask_rows(
+        traversal.init_frontier(g.num_vertices, 64,
+                                jnp.zeros((64,), jnp.int32)),
+        tg.padded_vertices)
+    dense = feq.fused_expand_q(q8, tg.tile_src, tg.tile_dst,
+                               tg.first_of_dst, fr, fr, jnp.uint32(3),
+                               jnp.uint32(0), interpret=True)
+    tgn = tiles.with_null_tile(tg)
+    q8n = feq.quantize_probs(tgn.prob)
+    act = sparse.row_block_activity(fr, tg.tile_size)
+    nt = tg.num_tiles
+    n_active = int(np.asarray(
+        act[tg.tile_src].astype(jnp.int32)).sum())
+    assert 0 < n_active < nt                    # genuinely compacted
+    cap = n_active + 3                          # force null-tile padding
+    ids = tiles.active_tile_ids(tg.tile_src, act, cap, nt)
+    fi = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32),
+         (tgn.tile_dst[ids][1:] != tgn.tile_dst[ids][:-1])
+         .astype(jnp.int32)])
+    gathered = feq.fused_expand_q_gathered(
+        q8n[ids], ids, tgn.tile_src[ids], tgn.tile_dst[ids], fi, fr, fr,
+        jnp.uint32(3), jnp.uint32(0), interpret=True)
+    np.testing.assert_array_equal(np.asarray(gathered), np.asarray(dense))
 
 
 def test_quantize_probs_endpoints_exact():

@@ -16,19 +16,15 @@ _SRC = str(pathlib.Path(__file__).parents[1] / "src")
 
 
 # -------------------------------------------------------------- HLO parser
-# Known seed debt (tracked in ROADMAP "tier-1 triage"): the flop parser was
-# written against TPU-style HLO dot text; CPU XLA emits dots whose
-# contracting dims the parser mis-reads, so absolute flop counts are wrong
-# on this backend.  Backend drift, not a logic regression — the xfail is
-# conditioned on the backend so a TPU run still reports real regressions.
-_XFAIL_CPU_HLO = pytest.mark.xfail(
-    jax.default_backend() != "tpu",
-    strict=False,
-    reason="seed debt: hlo_analysis flop parser mis-reads CPU XLA dot text "
-           "(written against TPU HLO); counts are backend-drifted on CPU")
+def _xla_flops(comp) -> float:
+    """``compiled.cost_analysis()`` returns a dict on some jax versions and
+    a one-element list of dicts on others — normalize."""
+    ca = comp.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca["flops"])
 
 
-@_XFAIL_CPU_HLO
 def test_parser_matches_xla_loop_free():
     def f(a, b):
         return a @ b
@@ -37,10 +33,9 @@ def test_parser_matches_xla_loop_free():
                             ).compile()
     got = ha.full_cost(comp.as_text())
     assert got["flops"] == 2 * 64 * 32 * 128
-    assert got["flops"] == float(comp.cost_analysis()["flops"])
+    assert got["flops"] == _xla_flops(comp)
 
 
-@_XFAIL_CPU_HLO
 def test_parser_weights_scan_loops():
     def g(x, w):
         def body(c, _):
@@ -53,10 +48,9 @@ def test_parser_weights_scan_loops():
     assert got["flops"] == 12 * 2 * 64**3, \
         "scan body must be weighted by trip count"
     # XLA's own analysis counts the body once — we must exceed it
-    assert got["flops"] > float(comp.cost_analysis()["flops"]) * 10
+    assert got["flops"] > _xla_flops(comp) * 10
 
 
-@_XFAIL_CPU_HLO
 def test_parser_nested_scans():
     def g(x, w):
         def outer(c, _):

@@ -30,15 +30,13 @@ def test_spec_rejects_unknown_fields_and_combos():
         sampling.SamplerSpec(diffusion="sir")
     with pytest.raises(ValueError):
         sampling.SamplerSpec(backend="warp")
-    # LT has every backend except the Pallas kernel (per-(dst, color)
-    # selection doesn't fit the per-(edge, color, level) expand kernel).
-    with pytest.raises(ValueError, match="unsupported combination"):
-        sampling.SamplerSpec(diffusion="lt", backend="kernel")
-    assert sampling.supported("ic", "kernel")
-    assert not sampling.supported("lt", "kernel")
-    for backend in ("tiled", "graph_parallel"):
+    # The support matrix is complete: every (diffusion, backend) cell has
+    # an implementation (LT's Pallas cell is `kernels.lt_select_expand`).
+    for backend in ("dense", "tiled", "kernel", "data_parallel",
+                    "graph_parallel"):
         for diffusion in ("ic", "lt"):
             assert sampling.supported(diffusion, backend)
+    sampling.SamplerSpec(diffusion="lt", backend="kernel")  # constructs
     # graph_parallel needs distinct batch and row axes
     with pytest.raises(ValueError, match="DISTINCT"):
         sampling.SamplerSpec(backend="graph_parallel", mesh_axis="x",
@@ -126,6 +124,32 @@ def test_lt_tiled_bit_identical_to_dense(graph):
         np.testing.assert_array_equal(got.roots, np.asarray(ref.roots))
 
 
+def test_lt_kernel_bit_identical_to_dense(graph):
+    """The ("lt", "kernel") matrix cell — the Pallas `lt_select_expand`
+    kernel (interpret mode on CPU) reproduces the dense LT sweep bit for
+    bit, on the dense grid AND the compacted sparse grid, and the sparse
+    grid runs strictly fewer grid steps.  tile_size=16 gives the ladder
+    enough tiles (255) that compaction has headroom on this 250-vertex
+    fixture."""
+    spec = sampling.SamplerSpec(diffusion="lt", backend="kernel",
+                                num_colors=64, master_seed=5, tile_size=16)
+    dense_ref = sampling.make_sampler(graph, spec.replace(backend="dense"))
+    kern = sampling.make_sampler(graph, spec)
+    kern_sparse = sampling.make_sampler(graph,
+                                        spec.replace(frontier="sparse"))
+    for bi in (0, 3):
+        ref = dense_ref.sample(bi)
+        got = kern.sample(bi)
+        np.testing.assert_array_equal(np.asarray(got.visited),
+                                      np.asarray(ref.visited))
+        dense_steps = kern.last_grid_steps
+        assert dense_steps == kern.last_levels * kern.tg_rev.num_tiles
+        got_sp = kern_sparse.sample(bi)
+        np.testing.assert_array_equal(np.asarray(got_sp.visited),
+                                      np.asarray(ref.visited))
+        assert 0 < kern_sparse.last_grid_steps < dense_steps
+
+
 def test_graph_parallel_bit_identical_on_trivial_mesh(graph):
     """The whole row-partitioned block program (frontier all-gather,
     psum-agreed termination, 2-D batch × row sharding) on a 1×1 mesh —
@@ -168,8 +192,7 @@ def test_sparse_frontier_bit_identical_across_matrix(graph):
     changes what gets computed, never what comes out."""
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     for diffusion in ("ic", "lt"):
-        backends = ["dense", "tiled"] + (["kernel"] if diffusion == "ic"
-                                         else [])
+        backends = ["dense", "tiled", "kernel"]
         ref = sampling.make_sampler(graph, sampling.SamplerSpec(
             diffusion=diffusion, num_colors=64, master_seed=5))
         for backend in backends + ["graph_parallel"]:
@@ -213,16 +236,19 @@ def test_sparse_frontier_dead_frontier_and_all_active():
     for prob in (0.0, 0.999):
         g = csr.from_edges(src, dst, np.full(len(src), prob, np.float32),
                            n, dedupe=True)
-        for backend in ("dense", "tiled"):
-            spec = sampling.SamplerSpec(backend=backend, num_colors=64,
-                                        master_seed=3, tile_size=8)
-            ref = sampling.make_sampler(g, spec).sample(0)
-            got = sampling.make_sampler(
-                g, spec.replace(frontier="sparse")).sample(0)
-            np.testing.assert_array_equal(np.asarray(got.visited),
-                                          np.asarray(ref.visited))
-        if prob == 0.0:                 # only the start colors survive
-            assert np.count_nonzero(np.asarray(ref.visited)) <= 64
+        for diffusion in ("ic", "lt"):
+            for backend in ("dense", "tiled", "kernel"):
+                spec = sampling.SamplerSpec(
+                    diffusion=diffusion, backend=backend, num_colors=64,
+                    master_seed=3, tile_size=8)
+                ref = sampling.make_sampler(g, spec).sample(0)
+                got = sampling.make_sampler(
+                    g, spec.replace(frontier="sparse")).sample(0)
+                np.testing.assert_array_equal(np.asarray(got.visited),
+                                              np.asarray(ref.visited))
+            if prob == 0.0 and diffusion == "ic":
+                # only the start colors survive
+                assert np.count_nonzero(np.asarray(ref.visited)) <= 64
 
 
 def test_sparse_frontier_capacity_bucket_boundaries(graph):

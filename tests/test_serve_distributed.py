@@ -31,7 +31,8 @@ def test_sharded_serving_equivalence():
                    "OK ragged_shards", "OK per_shard_budget",
                    "OK elastic_restore", "OK data_parallel_sampling",
                    "OK data_parallel_pool", "OK lt_data_parallel",
-                   "OK graph_parallel_pool", "OK graph_parallel_manifest",
+                   "OK graph_parallel_pool", "OK graph_parallel_kernel",
+                   "OK graph_parallel_manifest",
                    "OK sparse_frontier", "OK async_frontend",
                    "OK stream_updates"):
         assert marker in proc.stdout, proc.stdout
